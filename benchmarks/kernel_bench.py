@@ -1,0 +1,135 @@
+"""Kernel microbenchmarks (interpret mode on CPU — correctness-path timing,
+not TPU performance; TPU perf is assessed via the roofline dry-run) plus the
+scheduler decision-latency benchmark (the framework's own hot loop)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time_call(fn: Callable, *args, iters: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def kernel_rows() -> List[str]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    from repro.kernels.prefill_attention.ops import prefill_attention
+    from repro.kernels.prefill_attention.ref import prefill_attention_ref
+
+    b, sq, skv, hq, hkv, dh = 1, 256, 512, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)), jnp.float32)
+    qp = jnp.asarray(np.arange(sq)[None] + 256, jnp.int32)
+    kl = jnp.asarray([skv], jnp.int32)
+    t_kern = _time_call(jax.jit(lambda *a: prefill_attention(*a)), q, k, v, qp, kl)
+    t_ref = _time_call(jax.jit(lambda *a: prefill_attention_ref(*a)), q, k, v, qp, kl)
+    rows.append(f"prefill_attn_pallas_interp,{t_kern:.0f},ref_jnp={t_ref:.0f}us")
+
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    b, s, hq2, hkv2 = 4, 1024, 8, 2
+    q2 = jnp.asarray(rng.standard_normal((b, hq2, dh)), jnp.float32)
+    k2 = jnp.asarray(rng.standard_normal((b, s, hkv2, dh)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((b, s, hkv2, dh)), jnp.float32)
+    kl2 = jnp.asarray([s] * b, jnp.int32)
+    t_kern = _time_call(jax.jit(lambda *a: decode_attention(*a)), q2, k2, v2, kl2)
+    t_ref = _time_call(jax.jit(lambda *a: decode_attention_ref(*a)), q2, k2, v2, kl2)
+    rows.append(f"decode_attn_pallas_interp,{t_kern:.0f},ref_jnp={t_ref:.0f}us")
+
+    from repro.kernels.ssd_scan.ops import ssd
+    from repro.models.ssm import ssd_chunked
+
+    b3, l3, h3, p3, n3 = 1, 512, 4, 64, 32
+    x = jnp.asarray(rng.standard_normal((b3, l3, h3, p3)) * 0.3, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b3, l3, h3)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (h3,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b3, l3, n3)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b3, l3, n3)) * 0.3, jnp.float32)
+    t_kern = _time_call(jax.jit(lambda *a: ssd(*a)[0]), x, dt, A, Bm, Cm)
+    t_ref = _time_call(
+        jax.jit(lambda x, dt, A, B, C: ssd_chunked(x, dt, A, B[:, :, None], C[:, :, None], 128)[0]),
+        x, dt, A, Bm, Cm,
+    )
+    rows.append(f"ssd_scan_pallas_interp,{t_kern:.0f},ref_jnp={t_ref:.0f}us")
+    return rows
+
+
+def scheduler_rows() -> List[str]:
+    """Decision latency of the schedulers at production queue sizes."""
+    rows = []
+    rng = np.random.default_rng(0)
+    from repro.core import jax_sched
+    from repro.core.lut import StepTimeLUT
+    from repro.core.request import Phase, Request, SLOSpec
+    from repro.core.slack import SlackDecodeScheduler
+    from repro.core.urgency import UrgencyPrefillScheduler
+    from repro.sim.costmodel import PAPER_COST_MODEL as cm
+
+    n = 256
+    queue = []
+    for i in range(n):
+        r = Request(rid=i, arrival=float(rng.uniform(0, 10)),
+                    input_len=int(rng.integers(100, 100_000)), output_len=200,
+                    slo=SLOSpec())
+        queue.append(r)
+    sched = UrgencyPrefillScheduler()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        sched.select(queue, 5.0, 20_000.0, 8192)
+    rows.append(f"urgency_select_numpy_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host")
+
+    arr = jnp.asarray([r.arrival for r in queue], jnp.float32)
+    lens = jnp.asarray([r.input_len for r in queue], jnp.float32)
+    act = jnp.ones(n, bool)
+    fn = jax.jit(lambda a, l, m: jax_sched.urgency_select(a, l, l, m, 5.0, 20_000.0, 8.0, 8192))
+    fn(arr, lens, act)
+    t0 = time.perf_counter()
+    for _ in range(50):
+        out = fn(arr, lens, act)
+    jax.block_until_ready(out)
+    rows.append(f"urgency_select_jax_n{n},{(time.perf_counter()-t0)/50*1e6:.0f},jit")
+
+    lut = StepTimeLUT(analytic=cm.decode_lut_seed)
+    active = []
+    for i in range(n):
+        r = Request(rid=i, arrival=0.0, input_len=int(rng.integers(1000, 131_072)),
+                    output_len=500, slo=SLOSpec())
+        r.first_token_time = 9.0
+        r.decode_start = 9.0
+        r.n_generated = int(rng.integers(1, 100))
+        r.n_decoded = r.n_generated
+        r.phase = Phase.DECODE
+        active.append(r)
+    dsched = SlackDecodeScheduler(lut)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        dsched.select(active, 10.0)
+    rows.append(f"slack_select_numpy_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host")
+
+    be, se, tab = (jnp.asarray(x) for x in lut.as_arrays())
+    seqs = jnp.asarray([r.seq_len for r in active], jnp.int32)
+    ngen = jnp.asarray([r.n_decoded for r in active], jnp.int32)
+    ft = jnp.full((n,), 9.0, jnp.float32)
+    fn2 = jax.jit(
+        lambda s, g, f, m: jax_sched.slack_select(s, g, f, m, 10.0, 0.05, tab, be, se)
+    )
+    fn2(seqs, ngen, ft, act)
+    t0 = time.perf_counter()
+    for _ in range(50):
+        out = fn2(seqs, ngen, ft, act)
+    jax.block_until_ready(out.selected)
+    rows.append(f"slack_select_jax_n{n},{(time.perf_counter()-t0)/50*1e6:.0f},jit")
+    return rows

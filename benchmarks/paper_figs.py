@@ -1,0 +1,102 @@
+"""Benchmarks reproducing the paper's tables/figures (one function each).
+
+Shared QPS sweep (Kairos / Kairos+ / DistServe) is computed once and cached;
+each figure function derives its metric from the same runs, mirroring how
+the paper reports one experiment four ways (Figs. 3-6).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+from repro.sim.metrics import summarize
+from repro.sim.simulator import run_distserve, run_kairos, run_kairos_plus
+from repro.sim.trace import TraceConfig, generate_trace, trace_stats
+
+QPS_GRID = (2.0, 2.4, 2.8, 3.0, 3.4, 4.0, 5.0)
+N_REQ = 400
+SEED = 1
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep() -> Dict[Tuple[str, float], Dict]:
+    out = {}
+    for qps in QPS_GRID:
+        reqs = generate_trace(TraceConfig(n_requests=N_REQ, qps=qps, seed=SEED))
+        for name, runner in [
+            ("kairos", run_kairos),
+            ("kairos+", run_kairos_plus),
+            ("distserve", run_distserve),
+        ]:
+            t0 = time.perf_counter()
+            res = runner(reqs)
+            s = summarize(res)
+            s["sim_wall_s"] = time.perf_counter() - t0
+            out[(name, qps)] = s
+    return out
+
+
+def _rows(metric: str) -> List[str]:
+    sw = _sweep()
+    rows = []
+    for qps in QPS_GRID:
+        k = sw[("kairos", qps)][metric]
+        p = sw[("kairos+", qps)][metric]
+        d = sw[("distserve", qps)][metric]
+        rows.append(f"{metric}@qps{qps},{k:.4f},{p:.4f},{d:.4f}")
+    return rows
+
+
+def fig1a_trace_distribution() -> List[str]:
+    st = trace_stats(generate_trace(TraceConfig(n_requests=2000, seed=3)))
+    return [f"fig1a_{k},{v:.1f}," for k, v in st.items()]
+
+
+def fig1b_decode_step_vs_seqlen() -> List[str]:
+    from repro.sim.costmodel import PAPER_COST_MODEL as cm
+
+    rows = []
+    for s in (8_192, 16_384, 32_768, 65_536, 131_072):
+        t = cm.decode_step_time([s]) * 1e3
+        rows.append(f"fig1b_decode_ms@{s},{t:.2f},paper:11.0@8k/40.3@128k")
+    return rows
+
+
+def fig3_e2e_attainment() -> List[str]:
+    return _rows("e2e")
+
+
+def fig4_ttft_attainment() -> List[str]:
+    return _rows("ttft")
+
+
+def fig5_tpot_attainment() -> List[str]:
+    return _rows("tpot")
+
+
+def fig6_decode_throughput() -> List[str]:
+    return _rows("decode_tput_p50")
+
+
+def headline_gains() -> List[str]:
+    """Paper abstract numbers: max gains of Kairos over DistServe."""
+    sw = _sweep()
+    best = dict(ttft=0.0, tpot=0.0, e2e=0.0, tput=0.0)
+    bestp = dict(ttft=0.0, tpot=0.0, e2e=0.0, tput=0.0)
+    for qps in QPS_GRID:
+        d = sw[("distserve", qps)]
+        k = sw[("kairos", qps)]
+        p = sw[("kairos+", qps)]
+        for m in ("ttft", "tpot", "e2e"):
+            best[m] = max(best[m], 100 * (k[m] - d[m]))
+            bestp[m] = max(bestp[m], 100 * (p[m] - d[m]))
+        if d["decode_tput_p50"]:
+            best["tput"] = max(best["tput"], 100 * (k["decode_tput_p50"] / d["decode_tput_p50"] - 1))
+            bestp["tput"] = max(bestp["tput"], 100 * (p["decode_tput_p50"] / d["decode_tput_p50"] - 1))
+    return [
+        f"headline_ttft_gain_pp,{best['ttft']:.1f},paper:23.9 (kairos+: {bestp['ttft']:.1f})",
+        f"headline_tpot_gain_pp,{best['tpot']:.1f},paper:27.1 (kairos+: {bestp['tpot']:.1f})",
+        f"headline_e2e_gain_pp,{best['e2e']:.1f},paper:33.8 (kairos+: {bestp['e2e']:.1f})",
+        f"headline_decode_tput_gain_%,{best['tput']:.1f},paper:19.3 (kairos+: {bestp['tput']:.1f})",
+    ]

@@ -1,0 +1,48 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip kernel microbenches")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    t0 = time.perf_counter()
+
+    from benchmarks import paper_figs
+
+    for fn in [
+        paper_figs.fig1a_trace_distribution,
+        paper_figs.fig1b_decode_step_vs_seqlen,
+        paper_figs.fig3_e2e_attainment,
+        paper_figs.fig4_ttft_attainment,
+        paper_figs.fig5_tpot_attainment,
+        paper_figs.fig6_decode_throughput,
+        paper_figs.headline_gains,
+    ]:
+        for row in fn():
+            print(row)
+        sys.stdout.flush()
+
+    if not args.quick:
+        from benchmarks.kernel_bench import kernel_rows, scheduler_rows
+
+        for row in scheduler_rows():
+            print(row)
+        for row in kernel_rows():
+            print(row)
+
+    print(f"total_bench_wall_s,{time.perf_counter()-t0:.1f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Quickstart: reproduce the paper's headline comparison in one minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.sim.metrics import compare, summarize
+from repro.sim.simulator import run_distserve, run_kairos, run_kairos_plus
+from repro.sim.trace import TraceConfig, generate_trace, trace_stats
+
+
+def main() -> None:
+    trace = generate_trace(TraceConfig(n_requests=500, qps=3.0, seed=1))
+    print("trace:", trace_stats(trace))
+
+    kairos = run_kairos(trace)  # paper Alg. 1-3, faithful
+    plus = run_kairos_plus(trace)  # + beyond-paper fixes (DESIGN.md §5)
+    distserve = run_distserve(trace)  # FCFS + continuous batching baseline
+
+    for name, res in [("kairos", kairos), ("kairos+", plus), ("distserve", distserve)]:
+        s = summarize(res)
+        print(
+            f"{name:10s} TTFT={s['ttft']:.1%} TPOT={s['tpot']:.1%} "
+            f"E2E={s['e2e']:.1%} decode_tput_p50={s['decode_tput_p50']:.1f} tok/s"
+        )
+    print("kairos  vs distserve:", compare(kairos, distserve))
+    print("kairos+ vs distserve:", compare(plus, distserve))
+
+
+if __name__ == "__main__":
+    main()

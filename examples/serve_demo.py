@@ -1,0 +1,72 @@
+"""End-to-end disaggregated serving on real JAX compute (CPU demo scale).
+
+Serves a batch of requests through the chunked-prefill engine + slot-based
+decode engine with Kairos scheduling, then repeats with the DistServe
+baseline and prints per-request SLO outcomes. Greedy tokens are verified
+identical across policies (scheduling changes timing, never tokens).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.models import build_model
+from repro.serving.engine import DisaggServer, EngineConfig
+
+
+def make_requests(cfg, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        # long-tail lengths at demo scale
+        n_prompt = int(rng.choice([6, 9, 12, 40], p=[0.4, 0.3, 0.2, 0.1]))
+        prompt = list(map(int, rng.integers(2, cfg.vocab_size, n_prompt)))
+        reqs.append(
+            (
+                Request(
+                    rid=i, arrival=0.05 * i, input_len=n_prompt, output_len=10,
+                    slo=SLOSpec(ttft=30.0, tpot=3.0),  # CPU-scale SLOs
+                ),
+                prompt,
+            )
+        )
+    return reqs
+
+
+def main() -> None:
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+
+    results = {}
+    for policy, dpolicy in [("kairos-urgency", "kairos-slack"), ("fcfs", "continuous")]:
+        reqs = make_requests(cfg)
+        ecfg = EngineConfig(
+            max_slots=8, max_len=96, chunk_size=16,
+            prefill_policy=policy, decode_policy=dpolicy,
+        )
+        server = DisaggServer(model, params, ecfg)
+        outs = server.serve(reqs)
+        results[policy] = outs
+        print(f"\n== {policy} + {dpolicy} ==")
+        for r, _ in reqs:
+            assert r.phase == Phase.DONE
+            print(
+                f"  rid={r.rid} in={r.input_len:3d} ttft={r.ttft():6.2f}s "
+                f"mean_itl={r.mean_tpot()*1e3:7.1f}ms meets_e2e={r.meets_e2e()}"
+            )
+        print(f"  LUT cells observed: {int(server.lut.count.sum())}, "
+              f"mu_prefill={server.mu.mu:.0f} tok/s")
+
+    same = all(
+        results["kairos-urgency"][i] == results["fcfs"][i]
+        for i in results["kairos-urgency"]
+    )
+    print(f"\ntokens identical across schedulers: {same}")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Full QPS sweep (paper Figs. 3-6) with ablations + fault injection.
+
+    PYTHONPATH=src python examples/sim_sweep.py [--n 500]
+"""
+import argparse
+
+from repro.sim.metrics import summarize
+from repro.sim.simulator import (
+    FaultPlan,
+    run_distserve,
+    run_kairos,
+    run_kairos_plus,
+    run_policy,
+)
+from repro.sim.trace import TraceConfig, generate_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=500)
+    args = ap.parse_args()
+
+    print(f"{'qps':>4} | {'kairos':^24} | {'kairos+':^24} | {'distserve':^24}")
+    print(f"{'':>4} | {'ttft tpot e2e  tput':^24} | {'ttft tpot e2e  tput':^24} | {'ttft tpot e2e  tput':^24}")
+    for qps in (2.0, 2.4, 2.8, 3.0, 3.4, 4.0, 5.0):
+        reqs = generate_trace(TraceConfig(n_requests=args.n, qps=qps, seed=1))
+        cells = []
+        for runner in (run_kairos, run_kairos_plus, run_distserve):
+            s = summarize(runner(reqs))
+            cells.append(f"{s['ttft']:.2f} {s['tpot']:.2f} {s['e2e']:.2f} {s['decode_tput_p50']:5.1f}")
+        print(f"{qps:4.1f} | {cells[0]:^24} | {cells[1]:^24} | {cells[2]:^24}")
+
+    # ablation: prefill policies with continuous decode
+    print("\nPrefill-policy ablation (QPS 3.0, continuous decode):")
+    reqs = generate_trace(TraceConfig(n_requests=args.n, qps=3.0, seed=1))
+    for pol in ("fcfs", "sjf", "edf", "kairos-urgency", "kairos-urgency-plus"):
+        s = summarize(run_policy(reqs, pol, "continuous"))
+        print(f"  {pol:22s} ttft={s['ttft']:.2f} e2e={s['e2e']:.2f}")
+
+    # fault tolerance: decode node dies at t=30s
+    print("\nFault injection (decode node dies at t=30 s, 5 s recovery):")
+    for name, runner in (("kairos", run_kairos), ("distserve", run_distserve)):
+        s = summarize(runner(reqs, fault_plan=FaultPlan(decode_failures=(30.0,))))
+        print(f"  {name:10s} e2e={s['e2e']:.2f} (all {int(s['n'])} requests completed)")
+
+
+if __name__ == "__main__":
+    main()

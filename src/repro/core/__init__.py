@@ -1,0 +1,45 @@
+"""Kairos core: the paper's scheduling contribution.
+
+Host control plane (numpy): request model, Alg.1/2/3, LUT, pacer, baselines.
+Device data plane (jax): jittable mirrors in jax_sched (property-tested to
+match the host implementations exactly).
+"""
+from repro.core.lut import StepTimeLUT
+from repro.core.pacer import DeliveryPacer
+from repro.core.predictor import (
+    PrefillThroughputEstimator,
+    predict_all_finish_times,
+    predict_finish_time_fcfs,
+)
+from repro.core.request import Phase, Request, SLOSpec
+from repro.core.slack import (
+    DECODE_SCHEDULERS,
+    ContinuousBatchingScheduler,
+    SlackDecodeScheduler,
+)
+from repro.core.urgency import (
+    PREFILL_SCHEDULERS,
+    EDFPrefillScheduler,
+    FCFSPrefillScheduler,
+    SJFPrefillScheduler,
+    UrgencyPrefillScheduler,
+)
+
+__all__ = [
+    "StepTimeLUT",
+    "DeliveryPacer",
+    "PrefillThroughputEstimator",
+    "predict_all_finish_times",
+    "predict_finish_time_fcfs",
+    "Phase",
+    "Request",
+    "SLOSpec",
+    "DECODE_SCHEDULERS",
+    "ContinuousBatchingScheduler",
+    "SlackDecodeScheduler",
+    "PREFILL_SCHEDULERS",
+    "EDFPrefillScheduler",
+    "FCFSPrefillScheduler",
+    "SJFPrefillScheduler",
+    "UrgencyPrefillScheduler",
+]

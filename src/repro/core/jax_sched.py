@@ -1,0 +1,181 @@
+"""Jittable (jax.lax) implementations of the Kairos scheduling algorithms.
+
+Real deployments keep scheduling on the host, but at multi-pod scale the
+scheduler itself becomes a hot loop (thousands of active slots, every ~10 ms).
+These versions run the *same math* as core/{predictor,urgency,slack}.py as
+fixed-shape JAX programs over padded request-state arrays, so they can be
+fused into the device step (beyond-paper optimization) or vmapped for
+what-if sweeps. Property tests assert exact agreement with the numpy
+control-plane implementations.
+
+Conventions: slot arrays of length N; `active` masks real requests; slot
+index is the deterministic tie-breaker (mirrors rid ordering on the host).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_BIG = jnp.float32(3.0e38)
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 2: FCFS finish-time prediction (max-plus scan)
+# ----------------------------------------------------------------------------
+
+def fcfs_finish_times(
+    arrivals: jax.Array,  # (N,) f32
+    remaining: jax.Array,  # (N,) f32 tokens
+    active: jax.Array,  # (N,) bool
+    t_now: jax.Array,  # scalar
+    mu: jax.Array,  # scalar tokens/sec
+) -> jax.Array:
+    """Finish times under FCFS (t_i = max(t_{i-1}, a_i) + d_i) per slot."""
+    durs = jnp.where(active, remaining / jnp.maximum(mu, 1e-9), 0.0)
+    key = jnp.where(active, arrivals, _BIG)  # inactive last
+    order = jnp.argsort(key, stable=True)
+    a_s = arrivals[order]
+    d_s = durs[order]
+
+    def step(t, xs):
+        a, d = xs
+        t2 = jnp.maximum(t, a) + d
+        return t2, t2
+
+    _, fin_sorted = jax.lax.scan(step, jnp.asarray(t_now, jnp.float32), (a_s, d_s))
+    out = jnp.zeros_like(fin_sorted).at[order].set(fin_sorted)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 1: urgency-based prefill selection
+# ----------------------------------------------------------------------------
+
+def urgency_scores(
+    arrivals: jax.Array,
+    input_lens: jax.Array,  # (N,) f32
+    remaining: jax.Array,
+    active: jax.Array,
+    t_now: jax.Array,
+    mu: jax.Array,
+    slo_ttft: jax.Array,  # (N,) or scalar
+) -> jax.Array:
+    finish = fcfs_finish_times(arrivals, remaining, active, t_now, mu)
+    slack = slo_ttft - (finish - arrivals)
+    u = (slack / slo_ttft) / jnp.maximum(input_lens, 1.0)
+    return jnp.where(active & (remaining > 0), u, -_BIG)
+
+
+def urgency_select(
+    arrivals: jax.Array,
+    input_lens: jax.Array,
+    remaining: jax.Array,  # (N,) f32 remaining prefill tokens
+    active: jax.Array,
+    t_now: jax.Array,
+    mu: jax.Array,
+    slo_ttft: jax.Array,
+    budget: int,
+) -> jax.Array:
+    """Tokens of each slot to prefill this step (sum <= budget)."""
+    u = urgency_scores(arrivals, input_lens, remaining, active, t_now, mu, slo_ttft)
+    order = jnp.argsort(-u, stable=True)
+    rem_s = jnp.where(active, remaining, 0.0)[order]
+    cum = jnp.cumsum(rem_s)
+    take_s = jnp.clip(budget - (cum - rem_s), 0.0, rem_s)
+    take = jnp.zeros_like(take_s).at[order].set(take_s)
+    return take
+
+
+# ----------------------------------------------------------------------------
+# LUT lookup
+# ----------------------------------------------------------------------------
+
+def lut_lookup(
+    table: jax.Array,  # (NB, NS) f32 seconds
+    bsz_edges: jax.Array,  # (NB,) i32 ascending bucket lower-edges
+    seq_edges: jax.Array,  # (NS,) i32
+    bsz: jax.Array,  # i32 (any shape)
+    seq: jax.Array,  # i32 (same shape)
+) -> jax.Array:
+    bi = jnp.clip(jnp.searchsorted(bsz_edges, bsz, side="right") - 1, 0, bsz_edges.shape[0] - 1)
+    si = jnp.clip(jnp.searchsorted(seq_edges, seq, side="right") - 1, 0, seq_edges.shape[0] - 1)
+    return table[bi, si]
+
+
+# ----------------------------------------------------------------------------
+# Algorithm 3: slack-guided decode selection
+# ----------------------------------------------------------------------------
+
+class SlackSelection(NamedTuple):
+    selected: jax.Array  # (N,) bool — decode these this step
+    slack: jax.Array  # (N,) f32 per-request slack (Eq. 2)
+    s_min: jax.Array  # scalar
+    batch_size: jax.Array  # i32 |B|
+
+
+@partial(jax.jit, static_argnames=())
+def slack_select(
+    seq_lens: jax.Array,  # (N,) i32 current seq len
+    n_gen: jax.Array,  # (N,) i32 tokens generated so far
+    first_token_t: jax.Array,  # (N,) f32
+    active: jax.Array,  # (N,) bool
+    t_now: jax.Array,
+    slo_tpot: jax.Array,  # (N,) or scalar
+    table: jax.Array,
+    bsz_edges: jax.Array,
+    seq_edges: jax.Array,
+) -> SlackSelection:
+    n = seq_lens.shape[0]
+    elapsed = t_now - first_token_t
+    t1 = lut_lookup(table, bsz_edges, seq_edges, jnp.ones_like(seq_lens), seq_lens)
+    slack = slo_tpot * (n_gen + 1).astype(jnp.float32) - elapsed - t1
+    slack = jnp.where(active, slack, _BIG)
+    s_min = jnp.min(slack)
+
+    key = jnp.where(active, seq_lens, jnp.iinfo(jnp.int32).max)
+    order = jnp.argsort(key, stable=True)
+    seq_s = seq_lens[order]
+    act_s = active[order]
+
+    def step(carry, xs):
+        count, t_cur = carry
+        seq_i, act_i = xs
+        t_step = lut_lookup(table, bsz_edges, seq_edges, count + 1, seq_i)
+        improves = (count == 0) | ((count + 1).astype(jnp.float32) * t_cur > count.astype(jnp.float32) * t_step)
+        cond = act_i & (t_step <= s_min) & improves
+        count2 = jnp.where(cond, count + 1, count)
+        t_cur2 = jnp.where(cond, t_step, t_cur)
+        return (count2, t_cur2), cond
+
+    (bsz, _), sel_s = jax.lax.scan(
+        step, (jnp.int32(0), jnp.float32(0.0)), (seq_s, act_s)
+    )
+    selected = jnp.zeros((n,), bool).at[order].set(sel_s)
+    # fallback: nothing packs -> decode all active (Alg. 3 lines 19-21)
+    none = bsz == 0
+    selected = jnp.where(none, active, selected)
+    bsz = jnp.where(none, jnp.sum(active.astype(jnp.int32)), bsz)
+    return SlackSelection(selected, jnp.where(active, slack, jnp.nan), s_min, bsz)
+
+
+# ----------------------------------------------------------------------------
+# Running-mean LUT update (device-side mirror of StepTimeLUT.update)
+# ----------------------------------------------------------------------------
+
+def lut_update(
+    table: jax.Array,
+    counts: jax.Array,
+    bsz_edges: jax.Array,
+    seq_edges: jax.Array,
+    bsz: jax.Array,
+    seq: jax.Array,
+    observed: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    bi = jnp.clip(jnp.searchsorted(bsz_edges, bsz, side="right") - 1, 0, bsz_edges.shape[0] - 1)
+    si = jnp.clip(jnp.searchsorted(seq_edges, seq, side="right") - 1, 0, seq_edges.shape[0] - 1)
+    c = counts[bi, si]
+    new_mean = (table[bi, si] * c + observed) / (c + 1.0)
+    return table.at[bi, si].set(new_mean), counts.at[bi, si].set(c + 1.0)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper: (B, Hq, Dh) query layout -> grouped kernel layout + padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import flash_decode_attention
+
+
+def decode_attention(
+    q: jax.Array,  # (B, Hq, Dh)
+    k: jax.Array,  # (B, S, Hkv, Dh)
+    v: jax.Array,
+    kv_len: jax.Array,  # (B,)
+    *,
+    scale=None,
+    logit_cap: float = 0.0,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    qpk = hq // hkv
+    qg = q.reshape(b, hkv, qpk, dh)
+    bk = min(block_k, max(8, s))
+    pad = (-s) % bk
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    out = flash_decode_attention(
+        qg, k, v, kv_len, scale=scale, logit_cap=logit_cap, block_k=bk, interpret=interpret
+    )
+    return out.reshape(b, hq, dh)

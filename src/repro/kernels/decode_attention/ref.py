@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for GQA flash decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, Hq, Dh) — one token per sequence
+    k: jax.Array,  # (B, S, Hkv, Dh)
+    v: jax.Array,
+    kv_len: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    logit_cap: float = 0.0,
+) -> jax.Array:
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k, preferred_element_type=jnp.float32) * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    kvp = jnp.arange(k.shape[1], dtype=jnp.int32)
+    mask = kvp[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(mask, s, -0.7 * jnp.finfo(jnp.float32).max)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(v.dtype), v).astype(q.dtype)

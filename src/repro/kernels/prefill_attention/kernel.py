@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: chunked-prefill causal flash attention with GQA.
+
+The prefill instance's hot loop: a chunk of queries (at context offset
+`q_pos`) attends to the KV cache prefix `[0, kv_len)`. Online softmax over
+KV blocks keeps VMEM at O(block) — never materializing (Sq, Skv).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); kv innermost so the f32
+accumulator scratch carries across KV steps. GQA maps query head h to KV
+head h // (Hq // Hkv) in the K/V BlockSpec index maps. MXU alignment: block
+sizes are multiples of 128 on the contracting/lane dims (head_dim is padded
+by ops.py when needed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(
+    qpos_ref,  # (1, bq) i32 — absolute positions of this q block
+    kvlen_ref,  # (1, 1) i32 — valid KV prefix length for this batch row
+    q_ref,  # (1, bq, 1, dh)
+    k_ref,  # (1, bk, 1, dh)
+    v_ref,  # (1, bk, 1, dh)
+    o_ref,  # (1, bq, 1, dh)
+    acc_ref,  # (bq, dh) f32 scratch
+    m_ref,  # (bq, 1) f32 scratch
+    l_ref,  # (bq, 1) f32 scratch
+    *,
+    scale: float,
+    bk: int,
+    logit_cap: float,
+):
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]  # (bq, dh)
+    k = k_ref[0, :, 0, :]  # (bk, dh)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+    s = s * scale
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    qp = qpos_ref[0, :]  # (bq,)
+    kvp = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)[0]
+    mask = (kvp[None, :] <= qp[:, None]) & (kvp[None, :] < kvlen_ref[0, 0])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_prefill_attention(
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,
+    q_pos: jax.Array,  # (B, Sq) i32 absolute positions
+    kv_len: jax.Array,  # (B,) i32 valid prefix
+    *,
+    scale: float | None = None,
+    logit_cap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    qpk = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    grid = (b, hq, sq // bq, skv // bk)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, bk=bk, logit_cap=logit_cap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda ib, ih, iq, ik: (ib, iq)),  # qpos
+            pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0)),  # kvlen
+            pl.BlockSpec((1, bq, 1, dh), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec(
+                (1, bk, 1, dh),
+                lambda ib, ih, iq, ik, qpk=qpk: (ib, ik, ih // qpk, 0),
+            ),
+            pl.BlockSpec(
+                (1, bk, 1, dh),
+                lambda ib, ih, iq, ik, qpk=qpk: (ib, ik, ih // qpk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32)[:, None], q, k, v)

@@ -1,0 +1,51 @@
+"""Jit'd public wrapper: pads head_dim/seq to hardware-aligned blocks and
+dispatches to the Pallas kernel (interpret on CPU, compiled on TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.prefill_attention.kernel import flash_prefill_attention
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def prefill_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    scale=None,
+    logit_cap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Drop-in attention: (B,Sq,Hq,Dh) x (B,Skv,Hkv,Dh) -> (B,Sq,Hq,Dh)."""
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(8, skv))
+    # align seq dims to blocks; padded kv is masked via kv_len, padded q rows
+    # are sliced off
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    # padded q rows need positions that keep them masked-safe (attend to pos 0)
+    pos_pad = _pad_to(q_pos.astype(jnp.int32), 1, bq)
+    out = flash_prefill_attention(
+        qp, kp, vp, pos_pad, kv_len,
+        scale=scale, logit_cap=logit_cap,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return out[:, :sq]

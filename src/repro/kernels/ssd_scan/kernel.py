@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (state-space duality).
+
+Per (batch, head) the sequence is processed in chunks: the quadratic
+intra-chunk part is two MXU matmuls (C B^T masked by the decay matrix L,
+then against dt-scaled x), and the inter-chunk recurrence carries the
+(head_dim, state) SSM state in a VMEM f32 scratch across the sequential
+chunk grid dimension — the TPU-native replacement for the paper-adjacent
+CUDA scan: no warp shuffles, just block matmuls + a carried accumulator.
+
+Grid: (batch, heads, n_chunks) with chunks innermost (sequential).
+ngroups=1 (B/C shared across heads), matching the mamba2 configs used here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, 1, Q, P)
+    dt_ref,  # (1, 1, 1, Q)
+    a_ref,  # (1, 1) f32 — A for this head (negative)
+    b_ref,  # (1, 1, Q, N)
+    c_ref,  # (1, 1, Q, N)
+    y_ref,  # (1, 1, 1, Q, P) out
+    fs_ref,  # (1, 1, P, N) out — final state, written at the last chunk
+    state_ref,  # (P, N) f32 scratch — carried across chunks
+    *,
+    q: int,
+):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0, 0]
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+
+    dA = dt * A  # (Q,)
+    cums = jnp.cumsum(dA)  # (Q,)
+
+    # intra-chunk: L[i,j] = exp(cums_i - cums_j) for j <= i
+    seg = cums[:, None] - cums[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)  # (Q, Q)
+
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, Q)
+    xdt = x * dt[:, None]  # (Q, P)
+    y = jax.lax.dot_general(
+        scores * L, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    # contribution of the carried state: y += exp(cums) * (C @ state^T)
+    y = y + jnp.exp(cums)[:, None] * jax.lax.dot_general(
+        Cm, state_ref[...], (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, N) x (P, N)^T -> (Q, P)
+
+    # state update: state = state * exp(sum dA) + sum_t decay_t * dt_t x_t B_t^T
+    decay_states = jnp.exp(cums[-1] - cums)  # (Q,)
+    inc = jax.lax.dot_general(
+        xdt * decay_states[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(cums[-1]) + inc
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _finish():
+        fs_ref[0, 0] = state_ref[...].astype(fs_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,  # (B, H, NC, Q, P)
+    dt: jax.Array,  # (B, H, NC, Q) — already softplus'd
+    A: jax.Array,  # (H,) negative
+    Bm: jax.Array,  # (B, NC, Q, N) — ngroups=1, shared across heads
+    Cm: jax.Array,  # (B, NC, Q, N)
+    *,
+    interpret: bool = True,
+):
+    """Returns (y (B,H,NC,Q,P), final_state (B,H,P,N))."""
+    b, h, nc, q, p = x.shape
+    n = Bm.shape[-1]
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, q=q)
+    y, fs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, ic: (0, ih)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, q, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32)[None, :], Bm, Cm)
+    return y, fs

@@ -1,0 +1,38 @@
+"""Jit'd wrapper: (B, L, H, P) sequence layout -> chunked kernel layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+def ssd(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — post-softplus
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, L, N) — ngroups=1
+    Cm: jax.Array,  # (B, L, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+):
+    """Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity update
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // q
+    xk = x.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)
+    dtk = dt.reshape(b, nc, q, h).transpose(0, 3, 1, 2)
+    Bk = Bm.reshape(b, nc, q, n)
+    Ck = Cm.reshape(b, nc, q, n)
+    y, fs = ssd_scan(xk, dtk, A, Bk, Ck, interpret=interpret)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, lp, h, p)
+    return y[:, :l], fs

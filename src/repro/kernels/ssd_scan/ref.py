@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the SSD scan kernel (wraps models.ssm.ssd_chunked)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (B, H, NC, Q, P)
+    dt: jax.Array,  # (B, H, NC, Q)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, NC, Q, N)
+    Cm: jax.Array,  # (B, NC, Q, N)
+):
+    b, h, nc, q, p = x.shape
+    n = Bm.shape[-1]
+    l = nc * q
+    x_l = x.transpose(0, 2, 3, 1, 4).reshape(b, l, h, p)
+    dt_l = dt.transpose(0, 2, 3, 1).reshape(b, l, h)
+    B_l = Bm.reshape(b, l, 1, n)
+    C_l = Cm.reshape(b, l, 1, n)
+    y, fs = ssd_chunked(x_l, dt_l, A, B_l, C_l, chunk=q)
+    y = y.reshape(b, nc, q, h, p).transpose(0, 3, 1, 2, 4)
+    return y.astype(x.dtype), fs

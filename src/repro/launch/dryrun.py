@@ -1,0 +1,270 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# The two lines above MUST stay first — jax locks the device count on first
+# init, and the production meshes need 512 placeholder host devices.
+_DOC = """
+
+Per cell this driver:
+  1. builds the model + step function (train_step / prefill_step / serve_step),
+  2. builds ShapeDtypeStruct inputs + divisibility-checked shardings,
+  3. jit(...).lower(...).compile(),
+  4. records memory_analysis(), cost_analysis(), parsed collective bytes,
+     sharding fallbacks and timings to artifacts/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+  python -m repro.launch.dryrun --calibrate
+"""
+
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ALL_SHAPES,
+    ASSIGNED,
+    get_config,
+    input_specs,
+    shape_applicable,
+)
+from repro.dist.act_sharding import use_activation_sharding
+from repro.dist.sharding import (
+    ShardingPlan,
+    cache_pspecs,
+    input_pspecs,
+    param_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.roofline import hlo_stats
+from repro.roofline.analysis import model_flops_for, parse_collective_bytes
+from repro.training.optimizer import OptimizerConfig, OptState, init_opt_state
+from repro.training.train_step import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+DEFAULT_MICRO = 8  # train_4k: 256-batch -> 8 microbatches of 32
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def build_cell(arch: str, shape_name: str, mesh, sharding_mode: str = "train", n_micro: int = None):
+    """Returns (fn, args_structs, in_shardings, donate, meta)."""
+    cfg = get_config(arch)
+    spec = ALL_SHAPES[shape_name]
+    model = build_model(cfg)
+    plan = ShardingPlan(mesh, mode=sharding_mode)
+    specs = input_specs(cfg, spec)
+
+    params_struct = model.param_struct()
+    p_pspec = param_pspecs(cfg, params_struct, plan)
+
+    if spec.kind == "train":
+        opt_struct = jax.eval_shape(init_opt_state, params_struct)
+        opt_pspec = OptState(step=P(), m=p_pspec, v=jax.tree.map(lambda x: x, p_pspec))
+        batch_pspec = input_pspecs(cfg, specs, plan)
+        if n_micro is None:
+            n_micro = DEFAULT_MICRO if spec.global_batch % DEFAULT_MICRO == 0 else 1
+        # inside the scan body the microbatch has the scan dim stripped, so
+        # its sharding matches the original batch spec
+        micro_pspec = batch_pspec
+        step = make_train_step(
+            model,
+            OptimizerConfig(),
+            n_micro=n_micro,
+            grad_shardings=_ns(mesh, p_pspec),
+            micro_shardings=_ns(mesh, micro_pspec),
+        )
+        args = (params_struct, opt_struct, specs)
+        shardings = (_ns(mesh, p_pspec), _ns(mesh, opt_pspec), _ns(mesh, batch_pspec))
+        return step, args, shardings, (0, 1), dict(n_micro=n_micro, plan=plan)
+
+    if spec.kind == "prefill":
+        batch_pspec = input_pspecs(cfg, specs, plan)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch)
+
+        args = (params_struct, specs)
+        shardings = (_ns(mesh, p_pspec), _ns(mesh, batch_pspec))
+        return prefill_fn, args, shardings, (), dict(plan=plan)
+
+    # decode / serve_step
+    cache_struct_ = specs["cache"]
+    c_pspec = cache_pspecs(cfg, cache_struct_, plan)
+    tok_pspec = input_pspecs(cfg, dict(t=specs["tokens"]), plan)["t"]
+    pos_pspec = input_pspecs(cfg, dict(t=specs["positions"]), plan)["t"]
+
+    def serve_step(params, tokens, positions, cache):
+        return model.decode(params, tokens, positions, cache)
+
+    args = (params_struct, specs["tokens"], specs["positions"], cache_struct_)
+    shardings = (
+        _ns(mesh, p_pspec),
+        NamedSharding(mesh, tok_pspec),
+        NamedSharding(mesh, pos_pspec),
+        _ns(mesh, c_pspec),
+    )
+    return serve_step, args, shardings, (3,), dict(plan=plan)
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, skip_existing: bool = False,
+    sharding_mode: str = "train", tag: str = "", n_micro: int = None,
+) -> Dict:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    cell = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    path = os.path.join(ARTIFACTS, cell + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    spec = ALL_SHAPES[shape_name]
+    out: Dict = dict(arch=arch, shape=shape_name, mesh=mesh_kind, sharding_mode=sharding_mode, tag=tag)
+
+    reason = shape_applicable(cfg, spec)
+    if reason is not None:
+        out.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+        return out
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        chips = mesh.size
+        t0 = time.time()
+        fn, args, shardings, donate, meta = build_cell(arch, shape_name, mesh, sharding_mode, n_micro)
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        with use_activation_sharding(mesh, meta["plan"].batch_axes):
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        colls = parse_collective_bytes(hlo)
+        loop_aware = hlo_stats.analyze(hlo)
+
+        out.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            # raw XLA cost_analysis (loop bodies counted ONCE — see
+            # roofline/hlo_stats.py; kept for reference)
+            flops=float(ca.get("flops", 0.0)),
+            bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            transcendentals=float(ca.get("transcendentals", 0.0)),
+            # loop-aware per-device stats (used by the roofline)
+            hlo_stats=loop_aware.as_dict(),
+            memory=dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+                generated_code_bytes=int(ma.generated_code_size_in_bytes),
+            ),
+            collectives=colls,
+            model_flops=model_flops_for(cfg, spec),
+            params=cfg.count_params(),
+            active_params=cfg.count_active_params(),
+            sharding_fallbacks=meta["plan"].fallbacks,
+            hlo_len=len(hlo),
+        )
+    except Exception as e:  # a failure here is a bug in the system: record it
+        out.update(status="error", error=f"{type(e).__name__}: {e}", tb=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def calibrate() -> Dict:
+    """Determine cost_analysis semantics (global vs per-partition flops)."""
+    mesh = make_production_mesh(multi_pod=False)
+    n = 4096
+    a = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
+    b = jax.ShapeDtypeStruct((n, n), jnp.bfloat16)
+    sh_a = NamedSharding(mesh, P("data", None))
+    sh_b = NamedSharding(mesh, P(None, "model"))
+    fn = jax.jit(lambda x, y: x @ y, in_shardings=(sh_a, sh_b))
+    compiled = fn.lower(a, b).compile()
+    flops = float(compiled.cost_analysis().get("flops", 0.0))
+    true_global = 2.0 * n * n * n
+    ratio = flops / true_global
+    sem = "global" if ratio > 0.5 else "per_partition"
+    result = dict(reported=flops, true_global=true_global, ratio=ratio, semantics=sem, chips=mesh.size)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, "_calibration.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--calibrate", action="store_true")
+    ap.add_argument("--sharding-mode", default="train", choices=["train", "serve", "dp", "zero"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--n-micro", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.calibrate:
+        print(json.dumps(calibrate(), indent=1))
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shapes = list(ALL_SHAPES) if args.all or args.shape is None else [args.shape]
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                t0 = time.time()
+                res = run_cell(arch, shape, mk, skip_existing=args.skip_existing,
+                               sharding_mode=args.sharding_mode, tag=args.tag,
+                               n_micro=args.n_micro)
+                status = res.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f"compile={res['compile_s']}s flops={res['flops']:.3g} "
+                        f"coll={res['collectives'].get('total', 0):.3g}B "
+                        f"temp/dev={res['memory']['temp_bytes']/1e9:.2f}GB"
+                    )
+                elif status == "error":
+                    extra = res["error"][:160]
+                elif status == "skipped":
+                    extra = "skipped"
+                print(f"[{time.time()-t0:7.1f}s] {arch:26s} {shape:12s} {mk:6s} {status} {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; meshes are built by
+functions only. Single pod: 16x16 = 256 chips ('data' x 'model'); multi-pod:
+2 x 16 x 16 = 512 chips ('pod' x 'data' x 'model') — 'pod' is the DCN axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Elastic variant: arbitrary shapes (degraded device counts, smoke)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Whatever devices exist, one axis each of data/model (CPU tests)."""
+    n = len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))

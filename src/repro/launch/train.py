@@ -1,0 +1,76 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b-smoke \
+        --steps 100 --batch 8 --seq 256 [--ckpt-dir DIR] [--resume]
+
+On the CPU container this trains reduced configs; the same code path drives
+full configs on TPU (shardings from dist/, mesh from launch/mesh.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, SyntheticDataset
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.count_params():,}")
+
+    opt_cfg = OptimizerConfig(
+        lr=args.lr,
+        warmup_steps=max(2, args.steps // 10),
+        stable_steps=args.steps,
+        decay_steps=max(1, args.steps // 10),
+    )
+    ds = SyntheticDataset(cfg, DataConfig(seq_len=args.seq, global_batch=args.batch))
+    step_fn = jax.jit(make_train_step(model, opt_cfg, n_micro=args.n_micro))
+
+    ck = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    params = model.init(jax.random.key(0))
+    opt = init_opt_state(params)
+    start = 0
+    if ck is not None and ck.latest_step() is not None:
+        restored, start = ck.restore({"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        print(f"resumed at step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, ds.batch_at(step))
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(
+                f"step {step:5d} loss={float(m['loss']):.4f} lr={float(m['lr']):.2e} "
+                f"gnorm={float(m['grad_norm']):.2f} {(time.time()-t0):.0f}s",
+                flush=True,
+            )
+        if ck is not None and step and step % args.ckpt_every == 0:
+            ck.save(step, {"params": params, "opt": opt}, async_=True)
+    if ck is not None:
+        ck.save(args.steps, {"params": params, "opt": opt})
+
+
+if __name__ == "__main__":
+    main()

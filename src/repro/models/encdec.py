@@ -1,0 +1,238 @@
+"""Encoder-decoder trunk (seamless-m4t-medium backbone).
+
+The modality frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_src, d_model). The decoder is a standard
+causal transformer with cross-attention; decode shapes use a fixed encoder
+memory length (`DECODE_ENC_LEN`).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.act_sharding import constrain_batch
+from repro.models.layers import (
+    attention,
+    dense_init,
+    dtype_of,
+    gated_mlp,
+    rms_norm,
+)
+from repro.models.transformer import (
+    _init_attn,
+    _init_mlp,
+    _stack_layers,
+    _attn_qkv,
+    logits_from_hidden,
+)
+
+DECODE_ENC_LEN = 4096  # encoder memory length used by decode shape cells
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return dict(
+        attn=_init_attn(k1, cfg, dtype),
+        mlp=_init_mlp(k2, cfg, dtype),
+        pre_attn_norm=jnp.zeros((cfg.d_model,), dtype),
+        pre_mlp_norm=jnp.zeros((cfg.d_model,), dtype),
+    )
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return dict(
+        self_attn=_init_attn(k1, cfg, dtype),
+        cross_attn=_init_attn(k2, cfg, dtype),
+        mlp=_init_mlp(k3, cfg, dtype),
+        pre_self_norm=jnp.zeros((cfg.d_model,), dtype),
+        pre_cross_norm=jnp.zeros((cfg.d_model,), dtype),
+        pre_mlp_norm=jnp.zeros((cfg.d_model,), dtype),
+    )
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dtype = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    params = dict(
+        embed=(jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        enc_layers=_stack_layers(ks[1], cfg.enc_layers, partial(_init_enc_layer, cfg=cfg, dtype=dtype)),
+        dec_layers=_stack_layers(ks[2], cfg.num_layers, partial(_init_dec_layer, cfg=cfg, dtype=dtype)),
+        enc_final_norm=jnp.zeros((cfg.d_model,), dtype),
+        final_norm=jnp.zeros((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def encode(
+    params: Dict, src: jax.Array, cfg: ModelConfig, src_valid: Optional[jax.Array] = None
+) -> jax.Array:
+    """src: (B, S, D) frame embeddings (stub frontend). Bidirectional."""
+    x = constrain_batch(src.astype(dtype_of(cfg.dtype)))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, layer):
+        hn = rms_norm(h, layer["pre_attn_norm"], cfg.norm_eps)
+        q, k, v = _attn_qkv(layer["attn"], hn, positions, cfg)
+        a = attention(q, k, v, positions, src_valid, causal=False)
+        a = a.reshape(b, s, -1)
+        h = h + jnp.einsum("bse,ed->bsd", a, layer["attn"]["wo"])
+        h = h + gated_mlp(
+            rms_norm(h, layer["pre_mlp_norm"], cfg.norm_eps),
+            layer["mlp"]["w_gate"], layer["mlp"]["w_up"], layer["mlp"]["w_down"], cfg.act,
+        )
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_kv(layer: Dict, enc_out: jax.Array, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out, layer["cross_attn"]["wk"]).reshape(b, s, cfg.num_kv_heads, hd)
+    v = jnp.einsum("bsd,de->bse", enc_out, layer["cross_attn"]["wv"]).reshape(b, s, cfg.num_kv_heads, hd)
+    return k, v
+
+
+def _dec_layer_apply(
+    layer: Dict,
+    h: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    self_kv,  # None (in-chunk) or (ck, cv) cache
+    cross_k, cross_v,  # (B, S_enc, Hkv, Dh)
+    enc_valid: Optional[jax.Array],
+    tgt_valid: Optional[jax.Array],
+):
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    # self attention
+    hn = rms_norm(h, layer["pre_self_norm"], cfg.norm_eps)
+    q, k, v = _attn_qkv(layer["self_attn"], hn, positions, cfg)
+    if self_kv is None:
+        a = attention(q, k, v, positions, tgt_valid, causal=True)
+        new_self = (k, v)
+    else:
+        ck, cv = self_kv
+        if s == 1:
+            # select-update (see transformer.attn_block): a per-batch scatter
+            # into a sharded cache degenerates to a full-cache all-gather
+            m = ck.shape[1]
+            hit = (
+                jax.lax.broadcasted_iota(jnp.int32, (b, m), 1)
+                == positions[:, :1]
+            )[:, :, None, None]
+            ck = jnp.where(hit, k[:, 0][:, None], ck)
+            cv = jnp.where(hit, v[:, 0][:, None], cv)
+        else:
+            start = positions[:, 0]
+            ck = jax.vmap(lambda c, kk, st: jax.lax.dynamic_update_slice(c, kk, (st, 0, 0)))(ck, k, start)
+            cv = jax.vmap(lambda c, vv, st: jax.lax.dynamic_update_slice(c, vv, (st, 0, 0)))(cv, v, start)
+        a = attention(q, ck, cv, positions, tgt_valid, causal=True)
+        new_self = (ck, cv)
+    h = h + jnp.einsum("bse,ed->bsd", a.reshape(b, s, -1), layer["self_attn"]["wo"])
+
+    # cross attention (non-causal over encoder memory)
+    hn = rms_norm(h, layer["pre_cross_norm"], cfg.norm_eps)
+    qc = jnp.einsum("bsd,de->bse", hn, layer["cross_attn"]["wq"]).reshape(b, s, cfg.num_heads, hd)
+    a = attention(qc, cross_k, cross_v, positions, enc_valid, causal=False)
+    h = h + jnp.einsum("bse,ed->bsd", a.reshape(b, s, -1), layer["cross_attn"]["wo"])
+
+    h = h + gated_mlp(
+        rms_norm(h, layer["pre_mlp_norm"], cfg.norm_eps),
+        layer["mlp"]["w_gate"], layer["mlp"]["w_up"], layer["mlp"]["w_down"], cfg.act,
+    )
+    return h, new_self
+
+
+def forward_train(params: Dict, src: jax.Array, tgt: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced: returns decoder logits (B, S_tgt, V)."""
+    enc_out = encode(params, src, cfg)
+    x = constrain_batch(params["embed"][tgt])
+    b, s = tgt.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(h, layer):
+        ck, cv = _cross_kv(layer, enc_out, cfg)
+        h, _ = _dec_layer_apply(layer, h, positions, cfg, None, ck, cv, None, None)
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    return logits_from_hidden(params, x, cfg)
+
+
+def prefill_step(
+    params: Dict,
+    src: jax.Array,
+    tgt: jax.Array,
+    cfg: ModelConfig,
+    src_valid: Optional[jax.Array] = None,
+    tgt_valid: Optional[jax.Array] = None,
+):
+    """Encode + teacher-forced prefix. Returns (last logits, cache pytree).
+
+    Cache = dict(self_k, self_v (L,B,S_tgt,H,D), cross_k, cross_v (L,B,S_enc,H,D)).
+    """
+    enc_out = encode(params, src, cfg, src_valid)
+    x = constrain_batch(params["embed"][tgt])
+    b, s = tgt.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if tgt_valid is None:
+        tgt_valid = jnp.full((b,), s, jnp.int32)
+
+    def body(h, layer):
+        ck, cv = _cross_kv(layer, enc_out, cfg)
+        h, (sk, sv) = _dec_layer_apply(layer, h, positions, cfg, None, ck, cv, src_valid, tgt_valid)
+        return h, (sk, sv, ck, cv)
+
+    x, (sk, sv, ck, cv) = jax.lax.scan(body, x, params["dec_layers"])
+    last = jnp.take_along_axis(x, (tgt_valid - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    return logits_from_hidden(params, last, cfg), dict(self_k=sk, self_v=sv, cross_k=ck, cross_v=cv)
+
+
+def decode_step(
+    params: Dict,
+    tokens: jax.Array,  # (B, 1)
+    positions: jax.Array,  # (B,)
+    cfg: ModelConfig,
+    cache: Dict,
+    enc_valid: Optional[jax.Array] = None,
+):
+    x = constrain_batch(params["embed"][tokens])
+    b = tokens.shape[0]
+    pos2 = positions[:, None]
+    kv_valid = positions + 1
+
+    def body(h, xs):
+        layer, sk, sv, ck, cv = xs
+        h, (sk2, sv2) = _dec_layer_apply(
+            layer, h, pos2, cfg, (sk, sv), ck, cv, enc_valid, kv_valid
+        )
+        return h, (sk2, sv2)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"]),
+    )
+    logits = logits_from_hidden(params, x[:, 0], cfg)
+    return logits, dict(self_k=sk, self_v=sv, cross_k=cache["cross_k"], cross_v=cache["cross_v"])
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = DECODE_ENC_LEN) -> Dict:
+    hd = cfg.resolved_head_dim
+    kv_self = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, hd)
+    kv_cross = (cfg.num_layers, batch, enc_len, cfg.num_kv_heads, hd)
+    return dict(
+        self_k=(kv_self, cfg.dtype),
+        self_v=(kv_self, cfg.dtype),
+        cross_k=(kv_cross, cfg.dtype),
+        cross_v=(kv_cross, cfg.dtype),
+    )

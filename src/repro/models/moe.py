@@ -1,0 +1,110 @@
+"""Token-choice top-k MoE with capacity + grouped one-hot dispatch.
+
+GShard/MaxText-style dense dispatch: tokens are split into groups; within a
+group each token picks top-k experts; per-expert positions are assigned by
+cumulative sum with k=0 choices taking priority; tokens past an expert's
+capacity are dropped (their combine weight is zero, the residual stream
+carries them through). Dispatch/combine are einsums so the HLO is static and
+shards cleanly (group dim -> data axis, expert ff dim -> model axis).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, dense_init
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return dict(
+        router=dense_init(ks[0], (d, e), jnp.float32),
+        w_gate=dense_init(ks[1], (e, d, f), dtype),
+        w_up=dense_init(ks[2], (e, d, f), dtype),
+        w_down=dense_init(ks[3], (e, f, d), dtype, in_axis=1),
+    )
+
+
+def moe_ffn(x: jax.Array, params: Dict, cfg: ModelConfig) -> jax.Array:
+    """x: (..., d_model) -> (..., d_model). Flattens leading dims into groups."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    tokens = 1
+    for s in orig_shape[:-1]:
+        tokens *= s
+    x2 = x.reshape(tokens, d)
+
+    gs = min(cfg.moe_group_size, tokens)
+    ngroups = -(-tokens // gs)
+    pad = ngroups * gs - tokens
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    xg = x2.reshape(ngroups, gs, d)
+
+    e, k = cfg.num_experts, cfg.experts_per_token
+    cap = cfg.moe_capacity(gs)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, k)  # (g, s, k)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+
+    # one-hot expert choice per k: (g, s, k, e)
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)
+    # position within expert: cumulate over (k, s) with k-major priority
+    # flatten choices in (k, s) order so k=0 choices get earlier slots
+    oh_ks = onehot.transpose(0, 2, 1, 3).reshape(ngroups, k * gs, e)
+    pos_ks = jnp.cumsum(oh_ks, axis=1) - oh_ks  # position of each choice
+    pos = pos_ks.reshape(ngroups, k, gs, e).transpose(0, 2, 1, 3)  # (g,s,k,e)
+    within_cap = (pos < cap) & (onehot > 0)
+
+    pos_idx = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)  # (g, s, k)
+    cap_oh = jax.nn.one_hot(pos_idx, cap, dtype=jnp.float32)  # (g, s, k, c)
+    keep = jnp.any(within_cap, axis=-1)  # (g, s, k)
+
+    # dispatch tensor (g, s, e, c)
+    dispatch = jnp.einsum(
+        "gske,gskc->gsec", onehot * within_cap.astype(jnp.float32), cap_oh
+    )
+    combine = jnp.einsum(
+        "gske,gskc->gsec",
+        onehot * (topv * keep.astype(topv.dtype))[..., None],
+        cap_oh,
+    )
+
+    xdtype = x.dtype
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xdtype), xg)
+    g_act = act_fn(cfg.act)(
+        jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+    )
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("gecf,efd->gecd", g_act * u, params["w_down"])
+    yg = jnp.einsum("gsec,gecd->gsd", combine.astype(xdtype), expert_out)
+
+    y = yg.reshape(ngroups * gs, d)
+    if pad:
+        y = y[:tokens]
+    return y.reshape(orig_shape)
+
+
+def moe_ffn_ref(x: jax.Array, params: Dict, cfg: ModelConfig) -> jax.Array:
+    """Oracle: loop over experts densely (no capacity drop). For tests with
+    capacity_factor large enough that nothing is dropped, moe_ffn == this."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    logits = x2.astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(gates, cfg.experts_per_token)
+    topv = topv / jnp.maximum(jnp.sum(topv, axis=-1, keepdims=True), 1e-9)
+    y = jnp.zeros_like(x2)
+    for e in range(cfg.num_experts):
+        g = act_fn(cfg.act)(x2 @ params["w_gate"][e])
+        u = x2 @ params["w_up"][e]
+        out_e = (g * u) @ params["w_down"][e]
+        w_e = jnp.sum(jnp.where(topi == e, topv, 0.0), axis=-1)
+        y = y + out_e * w_e[:, None].astype(x2.dtype)
+    return y.reshape(shape)

@@ -1,0 +1,243 @@
+"""Mamba2 (SSD, state-space duality) block in pure JAX.
+
+Implements the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+state recurrence via lax.scan) for train/prefill and the O(1)-per-token
+recurrent form for decode. Matches the reference `ssd_minimal_discrete`
+semantics from the Mamba2 paper.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, gated_rms_norm
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state_dim
+
+
+def init_ssm_params(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_num_heads
+    g, n, w = cfg.ssm_ngroups, cfg.ssm_state_dim, cfg.ssm_conv_width
+    cch = conv_channels(cfg)
+    d_in_proj = 2 * di + 2 * g * n + h
+    ks = jax.random.split(key, 6)
+    # dt bias: inverse-softplus of dt ~ U[1e-3, 1e-1]
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (h,), jnp.float32)
+        * (math.log(0.1) - math.log(1e-3))
+        + math.log(1e-3)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return dict(
+        in_proj=dense_init(ks[1], (d, d_in_proj), dtype),
+        conv_w=(jax.random.normal(ks[2], (w, cch), jnp.float32) / math.sqrt(w)).astype(dtype),
+        conv_b=jnp.zeros((cch,), dtype),
+        A_log=jnp.log(
+            jax.random.uniform(ks[3], (h,), jnp.float32, minval=1.0, maxval=16.0)
+        ),
+        D=jnp.ones((h,), jnp.float32),
+        dt_bias=dt_bias,
+        norm=jnp.zeros((di,), dtype),
+        out_proj=dense_init(ks[4], (di, d), dtype),
+    )
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T). Returns (..., T, T) with [i,j] = sum_{k=j+1..i} x_k for
+    j<=i, -inf above the diagonal."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(T)
+    tril = ii[:, None] >= ii[None, :]
+    return jnp.where(tril, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, L, H, P)
+    dt: jax.Array,  # (B, L, H) — already softplus'd, zero on padded slots
+    A: jax.Array,  # (H,) negative
+    B: jax.Array,  # (B, L, G, N)
+    C: jax.Array,  # (B, L, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = -(-l // chunk)
+    pad = nc * chunk - l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    rep = h // g
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bh = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3).astype(f32)
+    Ch = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3).astype(f32)
+
+    dA = dtc * A.astype(f32)  # (b, nc, cs, h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    xdt = xc * dtc[..., None]
+
+    # 1. intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b, nc, h, cs, cs)
+    scores = jnp.einsum("bcshn,bcthn->bchst", Ch, Bh)
+    Y_diag = jnp.einsum("bchst,bcthp->bcshp", scores * L, xdt)
+
+    # 2. per-chunk input states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b, nc, cs, h)
+    states = jnp.einsum("bcthn,bcth,bcthp->bchpn", Bh, decay_states, xc * dtc[..., None])
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, nc, h)
+    s0 = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), f32)
+    )
+
+    def scan_fn(s, inp):
+        dec, st = inp  # (b,h), (b,h,p,n)
+        s_out = s  # state at chunk start
+        s_next = s * dec[..., None, None] + st
+        return s_next, s_out
+
+    cd = chunk_decay.transpose(1, 0, 2)  # (nc, b, h)
+    sts = states.transpose(1, 0, 2, 3, 4)  # (nc, b, h, p, n)
+    final_state, s_in = jax.lax.scan(scan_fn, s0, (cd, sts))
+    s_in = s_in.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # 4. state -> output within chunk
+    state_decay_out = jnp.exp(dA_cs)  # (b, nc, cs, h)
+    Y_off = jnp.einsum("bcshn,bchpn,bcsh->bcshp", Ch, s_in, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, nc * chunk, h, p)
+    if pad:
+        y = y[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, L, C); w: (W, C); b: (C,)."""
+    W = w.shape[0]
+    xt = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    L = x.shape[1]
+    for i in range(W):  # W is tiny (4); unrolled adds, no conv primitive games
+        out = out + xt[:, i : i + L, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: ModelConfig):
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state_dim
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + di + 2 * gn]
+    dt_raw = zxbcdt[..., di + di + 2 * gn :]
+    return z, xBC, dt_raw
+
+
+def ssm_forward(
+    params: Dict,
+    x_in: jax.Array,  # (B, L, D)
+    cfg: ModelConfig,
+    valid_len: Optional[jax.Array] = None,  # (B,) — mask dt beyond this
+    init_cache: Optional[Dict] = None,  # dict(conv=(B,W-1,Cch), state=(B,H,P,N))
+) -> Tuple[jax.Array, Dict]:
+    """Full-sequence / chunked-prefill SSD pass. Returns (y (B,L,D), cache)."""
+    b, l, d = x_in.shape
+    h, p = cfg.ssm_num_heads, cfg.ssm_head_dim
+    g, n, W = cfg.ssm_ngroups, cfg.ssm_state_dim, cfg.ssm_conv_width
+
+    zxbcdt = jnp.einsum("bld,de->ble", x_in, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+
+    if init_cache is not None:
+        xBC_ext = jnp.concatenate([init_cache["conv"].astype(xBC.dtype), xBC], axis=1)
+        conv_out = causal_conv(xBC_ext, params["conv_w"], params["conv_b"])[:, W - 1 :]
+        new_conv = jax.lax.dynamic_slice_in_dim(xBC_ext, xBC_ext.shape[1] - (W - 1), W - 1, axis=1)
+    else:
+        conv_out = causal_conv(xBC, params["conv_w"], params["conv_b"])
+        new_conv = xBC[:, -(W - 1) :, :] if l >= W - 1 else jnp.pad(xBC, ((0, 0), (W - 1 - l, 0), (0, 0)))
+
+    xs = conv_out[..., : cfg.ssm_d_inner].reshape(b, l, h, p)
+    Bmat = conv_out[..., cfg.ssm_d_inner : cfg.ssm_d_inner + g * n].reshape(b, l, g, n)
+    Cmat = conv_out[..., cfg.ssm_d_inner + g * n :].reshape(b, l, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    if valid_len is not None:
+        pos = jnp.arange(l, dtype=jnp.int32)[None, :, None]
+        dt = jnp.where(pos < valid_len[:, None, None], dt, 0.0)
+    A = -jnp.exp(params["A_log"])
+
+    init_state = init_cache["state"] if init_cache is not None else None
+    y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat, cfg.ssm_chunk, init_state)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, l, cfg.ssm_d_inner).astype(x_in.dtype)
+    y = gated_rms_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, dict(conv=new_conv.astype(x_in.dtype), state=final_state)
+
+
+def ssm_decode_step(
+    params: Dict,
+    x_in: jax.Array,  # (B, 1, D)
+    cfg: ModelConfig,
+    cache: Dict,  # conv (B, W-1, Cch), state (B, H, P, N)
+) -> Tuple[jax.Array, Dict]:
+    b = x_in.shape[0]
+    h, p = cfg.ssm_num_heads, cfg.ssm_head_dim
+    g, n, W = cfg.ssm_ngroups, cfg.ssm_state_dim, cfg.ssm_conv_width
+    di = cfg.ssm_d_inner
+
+    zxbcdt = jnp.einsum("bld,de->ble", x_in, params["in_proj"])[:, 0]
+    z, xBC, dt_raw = _split_proj(zxbcdt, cfg)
+
+    window = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum(
+        "bwc,wc->bc", window.astype(jnp.float32), params["conv_w"].astype(jnp.float32)
+    )
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)).astype(x_in.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs = conv_out[..., :di].reshape(b, h, p)
+    Bv = conv_out[..., di : di + g * n].reshape(b, g, n)
+    Cv = conv_out[..., di + g * n :].reshape(b, g, n)
+    rep = h // g
+    Bh = jnp.repeat(Bv, rep, axis=1)  # (B, H, N)
+    Ch = jnp.repeat(Cv, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)  # (B, H)
+
+    f32 = jnp.float32
+    state = cache["state"].astype(f32)
+    inc = jnp.einsum("bhp,bhn->bhpn", xs.astype(f32) * dt[..., None], Bh.astype(f32))
+    state = state * dA[..., None, None] + inc
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(f32), state)
+    y = y + params["D"][None, :, None] * xs.astype(f32)
+    y = y.reshape(b, di).astype(x_in.dtype)
+    y = gated_rms_norm(y, z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, dict(conv=new_conv.astype(x_in.dtype), state=state)
+
+
+def ssm_cache_shape(cfg: ModelConfig, batch: int):
+    return dict(
+        conv=((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)), "bfloat16"),
+        state=((batch, cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_dim), "float32"),
+    )

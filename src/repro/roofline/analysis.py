@@ -1,0 +1,281 @@
+"""Roofline terms from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are parsed out of the optimized HLO (sum of operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, async starts
+counted once). Whether cost_analysis reports per-partition or global values
+is runtime-dependent; calibrate_cost_semantics() measures it with a known
+matmul and the caller normalizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.roofline.hw import V5E, ChipSpec
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "bf16[64,2048,128]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+# "%name = <result shape or tuple> <kind>[-start](..." — SPMD HLO prints
+# operands as bare %refs, so we read the *result* shape (per-device shard)
+# and convert to bytes-on-the-wire per device using the collective's
+# semantics + replica group size.
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+("
+    + "|".join(_COLL_KINDS)
+    + r")(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 2  # unknown; conservative
+
+
+def _wire_bytes(kind: str, result_bytes: int, g: int) -> float:
+    """Per-device bytes moved over ICI for one collective (ring algorithms).
+
+    all-reduce: result is the reduced shard-size tensor -> 2*S*(g-1)/g
+    all-gather: result is the gathered tensor              -> S*(g-1)/g
+    reduce-scatter: result is the scattered piece S/g      -> S*(g-1) (= full*(g-1)/g)
+    all-to-all / collective-permute: result-sized exchange -> S*(g-1)/g / S
+    """
+    if g <= 1:
+        return 0.0
+    f = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * f
+    if kind == "all-gather":
+        return result_bytes * f
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * f
+    return float(result_bytes)  # collective-permute
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by kind, from optimized (SPMD) HLO.
+
+    Async pairs (-start/-done) are counted once via the -start op. Returns
+    {kind: bytes, ..., "total": bytes, "count": n_ops}.
+    """
+    out: Counter = Counter()
+    count = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result, kind = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(result))
+        if nbytes:
+            out[kind] += _wire_bytes(kind, nbytes, _group_size(line))
+            count += 1
+    total = float(sum(out.values()))
+    res = {k: float(v) for k, v in out.items()}
+    res["total"] = total
+    res["count"] = count
+    return res
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_global: float
+    bytes_global: float  # loop-aware HLO bytes (CPU-fusion upper bound)
+    collective_bytes_per_chip: float
+    model_flops: float  # 6*N*D (train) / 2*N_active*tokens (inference)
+    bytes_analytic_global: float = 0.0  # TPU-fusion lower bound
+    hw: ChipSpec = field(default_factory=lambda: V5E)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_global / (self.chips * self.hw.peak_flops_bf16)
+
+    @property
+    def memory_s(self) -> float:
+        """Memory term from the analytic (TPU-fusion) model when available;
+        the HLO-derived number is a CPU-backend upper bound (memory_s_hlo)."""
+        b = self.bytes_analytic_global or self.bytes_global
+        return b / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def memory_s_hlo(self) -> float:
+        return self.bytes_global / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def collective_s(self) -> float:
+        # per-chip collective bytes over per-chip aggregate ICI bandwidth
+        return self.collective_bytes_per_chip / (self.hw.ici_link_bw * self.hw.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        if self.flops_global <= 0:
+            return 0.0
+        return self.model_flops / self.flops_global
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of the compute roofline the dominant-bound step achieves
+        on useful model flops."""
+        t = self.step_time_bound_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / t) / (self.chips * self.hw.peak_flops_bf16)
+
+    def as_dict(self) -> Dict:
+        return dict(
+            arch=self.arch,
+            shape=self.shape,
+            mesh=self.mesh,
+            chips=self.chips,
+            flops_global=self.flops_global,
+            bytes_global=self.bytes_global,
+            bytes_analytic_global=self.bytes_analytic_global,
+            collective_bytes_per_chip=self.collective_bytes_per_chip,
+            model_flops=self.model_flops,
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            memory_s_hlo=self.memory_s_hlo,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            useful_flops_frac=self.useful_flops_frac,
+            roofline_frac=self.roofline_frac,
+        )
+
+
+def analytic_memory_bytes(cfg, spec, n_micro: int = 8, windowed: bool = False) -> float:
+    """TPU-fusion lower-bound HBM traffic per step (global bytes).
+
+    The HLO-derived byte count is compiled for the CPU backend, whose far
+    weaker op fusion materializes every elementwise intermediate — measured
+    10-200x above what a TPU executes. This analytic model counts what a
+    well-fused TPU program must stream:
+
+      train:   weight reads (fwd+bwd per microbatch) + optimizer traffic +
+               C materialized activations per layer + attention scores
+               (naive path: quadratic; flash kernels remove this term)
+      prefill: weight read + activations + scores + KV output
+      decode:  weight read + full KV-cache read + GQA expansion
+    """
+    n_total = cfg.count_params()
+    n_active = cfg.count_active_params()
+    tokens = spec.global_batch * spec.seq_len
+    d = max(cfg.d_model, 1)
+    L = max(cfg.num_layers, 1)
+    hq = max(cfg.num_heads, 1)
+    hkv = max(cfg.num_kv_heads, 1)
+    dh = cfg.resolved_head_dim
+
+    def attn_layers() -> int:
+        if cfg.family == "hybrid":
+            return cfg.num_layers // max(1, cfg.hybrid_period)
+        if cfg.family == "ssm":
+            return 0
+        return L
+
+    if spec.kind == "train":
+        micro = n_micro if spec.global_batch % n_micro == 0 else 1
+        w = 2.0 * n_total * (2 * micro)  # bf16 read fwd+bwd per microbatch
+        opt = 20.0 * n_total  # f32 m/v read+write + param read/write
+        acts = 12.0 * L * tokens * d * 2.0  # ~12 materialized tensors/layer (remat incl.)
+        # naive attention scores fwd + bwd recompute (f32), per attn layer
+        scores = 3.0 * attn_layers() * spec.global_batch * hq * (spec.seq_len ** 2) * 4.0
+        if cfg.is_encdec:
+            scores *= 0.75  # half-length enc/dec sequences
+        return w + opt + acts + scores
+
+    if spec.kind == "prefill":
+        w = 2.0 * n_active
+        acts = 8.0 * L * tokens * d * 2.0
+        # blockwise (flash-style) attention path at 32K: no quadratic term
+        kv_out = 2.0 * attn_layers() * tokens * 2 * hkv * dh * 2.0
+        return w + acts + kv_out
+
+    # decode: one token per sequence
+    w = 2.0 * n_active
+    if windowed and cfg.alternate_local_global and cfg.sliding_window and spec.seq_len > cfg.sliding_window:
+        # windowed ring cache (§Perf D6): half the layers read only the window
+        per_layer_tokens = (spec.seq_len + cfg.sliding_window) / 2.0
+    else:
+        per_layer_tokens = float(spec.seq_len)
+    kv_read = 2.0 * attn_layers() * spec.global_batch * per_layer_tokens * hkv * dh * 2.0
+    if cfg.family in ("ssm", "hybrid"):
+        ssm_state = (
+            2.0 * L * spec.global_batch * cfg.ssm_num_heads * cfg.ssm_head_dim
+            * cfg.ssm_state_dim * 4.0
+        )
+        kv_read += 2.0 * ssm_state
+    acts = 6.0 * L * spec.global_batch * d * 2.0
+    return w + kv_read + acts
+
+
+def model_flops_for(cfg, spec) -> float:
+    """MODEL_FLOPS: 6*N*D for training; forward-only for inference shapes."""
+    n_active = cfg.count_active_params()
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec.global_batch

@@ -1,0 +1,18 @@
+"""Target hardware constants (TPU v5e) for the roofline analysis."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12  # per chip
+    hbm_bw: float = 819e9  # bytes/sec per chip
+    hbm_bytes: float = 16e9  # capacity per chip
+    ici_link_bw: float = 50e9  # bytes/sec per link
+    ici_links: int = 4  # links per chip (2D torus)
+    dcn_bw: float = 25e9  # per host, cross-pod
+
+
+V5E = ChipSpec()

@@ -1,0 +1,124 @@
+"""Roofline report generation from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (loop-aware per-device stats), builds
+RooflineTerms per cell, and emits the §Roofline markdown table + per-cell
+bottleneck narratives. Single-pod cells only (per assignment); multi-pod
+cells prove the 'pod' axis shards.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ALL_SHAPES, get_config
+from repro.roofline.analysis import RooflineTerms, analytic_memory_bytes, model_flops_for
+from repro.configs.shapes import ALL_SHAPES as _SHAPES
+from repro.roofline.hw import V5E
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, f"*__{mesh}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def terms_for(cell: Dict) -> Optional[RooflineTerms]:
+    if cell.get("status") != "ok":
+        return None
+    hs = cell["hlo_stats"]
+    chips = cell["chips"]
+    cfg = get_config(cell["arch"])
+    spec = ALL_SHAPES[cell["shape"]]
+    return RooflineTerms(
+        arch=cell["arch"],
+        shape=cell["shape"],
+        mesh=cell["mesh"],
+        chips=chips,
+        flops_global=hs["flops"] * chips,
+        bytes_global=hs["bytes_accessed"] * chips,
+        # the windowed ring cache (D6) only exists in cells compiled after it
+        # landed (tagged runs); baselines predate it
+        bytes_analytic_global=analytic_memory_bytes(
+            cfg, spec, windowed=bool(cell.get("tag"))
+        ),
+        collective_bytes_per_chip=hs["collective_bytes"],
+        model_flops=cell["model_flops"],
+    )
+
+
+def _advice(t: RooflineTerms, cell: Dict) -> str:
+    if t.dominant == "compute":
+        if t.useful_flops_frac < 0.5:
+            return "compute-bound with low useful-flops fraction: cut remat/recompute or pad waste"
+        return "compute-bound near useful flops: raise MXU utilization (larger tiles, fused attention)"
+    if t.dominant == "memory":
+        return "HBM-bound: shrink bytes (fuse elementwise chains, narrower dtypes, windowed KV)"
+    return "collective-bound: reshard to cut all-gathers (2D weight sharding trades memory for comm)"
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = []
+    hdr = (
+        "| arch | shape | chips | compute_s | memory_s | mem_s(hlo-ub) | collective_s | "
+        "dominant | MODEL_FLOPS | useful/HLO | roofline_frac | HBM/chip | note |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|"
+    )
+    rows.append(hdr)
+    for cell in load_cells(mesh):
+        arch, shape = cell["arch"], cell["shape"]
+        if cell.get("status") == "skipped":
+            rows.append(
+                f"| {arch} | {shape} | — | — | — | — | skipped | — | — | — | — | "
+                f"{cell['reason'][:70]}… |"
+            )
+            continue
+        if cell.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | — | ERROR | | | | | | | | {cell.get('error','')[:60]} |")
+            continue
+        t = terms_for(cell)
+        hbm = (
+            cell["memory"]["argument_bytes"]
+            + cell["memory"]["temp_bytes"]
+            + cell["memory"]["output_bytes"]
+        ) / 1e9
+        rows.append(
+            f"| {arch} | {shape} | {t.chips} | {t.compute_s:.4g} | {t.memory_s:.4g} | "
+            f"{t.memory_s_hlo:.4g} | {t.collective_s:.4g} | **{t.dominant}** | {t.model_flops:.3g} | "
+            f"{t.useful_flops_frac:.2f} | {t.roofline_frac:.3f} | {hbm:.1f} GB | "
+            f"{_advice(t, cell)} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells() -> Dict[str, Dict]:
+    """The three hillclimb targets: worst roofline fraction, most
+    collective-bound, most representative of the paper (decode serve_step)."""
+    cells = [c for c in load_cells("single") if c.get("status") == "ok"]
+    terms = [(terms_for(c), c) for c in cells]
+    worst = min(terms, key=lambda tc: tc[0].roofline_frac if tc[0].roofline_frac > 0 else 1e9)
+    coll = max(terms, key=lambda tc: tc[0].collective_s / max(tc[0].step_time_bound_s, 1e-12))
+    decode_cells = [tc for tc in terms if tc[1]["shape"] == "decode_32k"]
+    rep = max(decode_cells, key=lambda tc: tc[1]["model_flops"])
+    return {
+        "worst_roofline": dict(cell=f"{worst[1]['arch']}/{worst[1]['shape']}", **worst[0].as_dict()),
+        "most_collective_bound": dict(cell=f"{coll[1]['arch']}/{coll[1]['shape']}", **coll[0].as_dict()),
+        "paper_representative": dict(cell=f"{rep[1]['arch']}/{rep[1]['shape']}", **rep[0].as_dict()),
+    }
+
+
+def main() -> None:
+    print("## Roofline (single-pod, 256 x v5e)\n")
+    print(markdown_table("single"))
+    print("\n### Hillclimb targets\n")
+    for k, v in pick_hillclimb_cells().items():
+        print(f"- **{k}**: {v['cell']} — dominant={v['dominant']}, roofline_frac={v['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

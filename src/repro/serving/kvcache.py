@@ -1,0 +1,82 @@
+"""Slot-based KV cache management for the decode engine.
+
+Host-side allocator tracks which slots are live and enforces a token-budget
+admission cap (the paper's memory-bound decode regime); device-side helpers
+gather/scatter per-slot cache slices so a scheduler-chosen sub-batch can be
+decoded without touching delayed slots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def cache_batch_dim(cfg: ModelConfig, leaf_name: str) -> int:
+    """Axis of the slot/batch dimension for each cache leaf."""
+    if cfg.family == "hybrid" and leaf_name in ("conv", "state"):
+        return 2  # (Ns, per, B, ...)
+    return 1  # (L, B, ...) attention / ssm / encdec
+
+
+def gather_slots(cfg: ModelConfig, cache: Dict, slot_idx: jax.Array) -> Dict:
+    out = {}
+    for name, leaf in cache.items():
+        ax = cache_batch_dim(cfg, name)
+        out[name] = jnp.take(leaf, slot_idx, axis=ax)
+    return out
+
+
+def scatter_slots(cfg: ModelConfig, cache: Dict, sub: Dict, slot_idx: jax.Array) -> Dict:
+    out = {}
+    for name, leaf in cache.items():
+        ax = cache_batch_dim(cfg, name)
+        idx = [slice(None)] * leaf.ndim
+        idx[ax] = slot_idx
+        out[name] = leaf.at[tuple(idx)].set(sub[name])
+    return out
+
+
+@dataclass
+class SlotAllocator:
+    """Host bookkeeping: slot ids + KV token budget (admission control)."""
+
+    max_slots: int
+    kv_cap_tokens: int
+
+    free: List[int] = field(default_factory=list)
+    live_tokens: Dict[int, int] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self.free = list(range(self.max_slots))[::-1]
+
+    @property
+    def used_tokens(self) -> int:
+        return sum(self.live_tokens.values())
+
+    def can_admit(self, need_tokens: int) -> bool:
+        return bool(self.free) and self.used_tokens + need_tokens <= self.kv_cap_tokens
+
+    def alloc(self, need_tokens: int) -> Optional[int]:
+        if not self.can_admit(need_tokens):
+            return None
+        slot = self.free.pop()
+        self.live_tokens[slot] = need_tokens
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot in self.live_tokens:
+            del self.live_tokens[slot]
+            self.free.append(slot)
+
+    def snapshot(self) -> Dict:
+        return dict(live_tokens=dict(self.live_tokens))
+
+    def restore(self, snap: Dict) -> None:
+        self.live_tokens = dict(snap["live_tokens"])
+        live = set(self.live_tokens)
+        self.free = [s for s in range(self.max_slots) if s not in live][::-1]

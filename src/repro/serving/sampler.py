@@ -1,0 +1,26 @@
+"""Token sampling."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,  # (B, V) f32
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Greedy (temperature 0) or temperature/top-k sampling. Returns (B,) i32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling needs a PRNG key"
+    logits = logits / temperature
+    if top_k and top_k > 0 and top_k < logits.shape[-1]:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

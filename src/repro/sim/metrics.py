@@ -1,0 +1,82 @@
+"""SLO-attainment and throughput metrics (paper §4.1 Metrics)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.request import Phase, Request
+from repro.sim.simulator import SimResult
+
+
+@dataclass(frozen=True)
+class Attainment:
+    ttft: float  # fraction of requests meeting the TTFT SLO
+    tpot: float  # fraction meeting the TPOT SLO (mean inter-token latency)
+    e2e: float  # both
+    decode_tput_p50: float  # median per-request decode tokens/sec
+    decode_tput_mean: float
+    n: int
+
+    def as_dict(self) -> Dict[str, float]:
+        return dict(
+            ttft=self.ttft,
+            tpot=self.tpot,
+            e2e=self.e2e,
+            decode_tput_p50=self.decode_tput_p50,
+            decode_tput_mean=self.decode_tput_mean,
+            n=self.n,
+        )
+
+
+def attainment(requests: Sequence[Request]) -> Attainment:
+    done = [r for r in requests if r.phase == Phase.DONE]
+    n = len(done)
+    if n == 0:
+        return Attainment(0.0, 0.0, 0.0, 0.0, 0.0, 0)
+    ttft = sum(r.meets_ttft() for r in done) / n
+    tpot = sum(r.meets_tpot() for r in done) / n
+    e2e = sum(r.meets_e2e() for r in done) / n
+    tputs = [t for t in (r.decode_tput() for r in done) if t is not None]
+    p50 = float(np.percentile(tputs, 50)) if tputs else 0.0
+    mean = float(np.mean(tputs)) if tputs else 0.0
+    return Attainment(ttft, tpot, e2e, p50, mean, n)
+
+
+def summarize(result: SimResult) -> Dict[str, float]:
+    att = attainment(result.requests)
+    out = att.as_dict()
+    out.update(
+        makespan=result.makespan,
+        decode_steps=result.decode_steps,
+        decode_tokens=result.decode_tokens,
+        agg_decode_tput=(
+            result.decode_tokens / result.decode_busy if result.decode_busy else 0.0
+        ),
+        prefill_busy=result.prefill_busy,
+        decode_busy=result.decode_busy,
+    )
+    done = [r for r in result.requests if r.phase == Phase.DONE]
+    if done:
+        out["ttft_p50"] = float(np.percentile([r.ttft() for r in done], 50))
+        out["ttft_p99"] = float(np.percentile([r.ttft() for r in done], 99))
+        tpots = [r.mean_tpot() for r in done if r.mean_tpot() is not None]
+        out["tpot_p50"] = float(np.percentile(tpots, 50)) if tpots else 0.0
+        out["tpot_p99"] = float(np.percentile(tpots, 99)) if tpots else 0.0
+    return out
+
+
+def compare(kairos: SimResult, baseline: SimResult) -> Dict[str, float]:
+    """Headline deltas, paper-style (percentage points / relative %)."""
+    ka, ba = attainment(kairos.requests), attainment(baseline.requests)
+    return dict(
+        ttft_gain_pp=100 * (ka.ttft - ba.ttft),
+        tpot_gain_pp=100 * (ka.tpot - ba.tpot),
+        e2e_gain_pp=100 * (ka.e2e - ba.e2e),
+        decode_tput_gain_rel=(
+            100 * (ka.decode_tput_p50 / ba.decode_tput_p50 - 1.0)
+            if ba.decode_tput_p50
+            else 0.0
+        ),
+    )

@@ -1,0 +1,145 @@
+"""Checkpointing: sharded pytree snapshots with atomic manifests.
+
+Fault-tolerance contract:
+  * save() writes leaves to <dir>/step_N.tmp/ then atomically renames to
+    <dir>/step_N/ and updates LATEST only after a complete write — a killed
+    writer can never produce a half-checkpoint that restore() would load.
+  * async mode runs the serialization on a background thread (training
+    continues); join() blocks until durable.
+  * restore() returns (pytree, step) from the newest complete checkpoint.
+
+Leaves are stored as .npy files keyed by their pytree path, dtype-preserved
+(bf16 round-trips via a uint16 view).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "bfloat16"
+
+
+def _path_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "__".join(parts) or "leaf"
+
+
+def _save_leaf(d: str, key: str, arr) -> Dict[str, Any]:
+    a = np.asarray(arr)
+    meta = {"dtype": str(arr.dtype), "shape": list(a.shape)}
+    if str(arr.dtype) == _BF16_TAG:
+        a = np.asarray(jax.device_get(arr)).view(np.uint16)
+        meta["stored"] = "uint16"
+    np.save(os.path.join(d, key + ".npy"), a, allow_pickle=False)
+    return meta
+
+
+def _load_leaf(d: str, key: str, meta: Dict[str, Any]):
+    a = np.load(os.path.join(d, key + ".npy"), allow_pickle=False)
+    if meta.get("stored") == "uint16":
+        a = a.view(jnp.bfloat16)
+    return jnp.asarray(a)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, async_: bool = False) -> None:
+        # materialize on host first (cheap for CPU; device_get for TPU)
+        flat = jax.tree_util.tree_flatten_with_path(tree)
+        host = [(p, jax.device_get(v)) for p, v in flat[0]]
+        treedef = flat[1]
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {"step": step, "leaves": {}}
+            for path, val in host:
+                key = _path_key(path)
+                manifest["leaves"][key] = _save_leaf(tmp, key, val)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "LATEST.tmp"), os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        if async_:
+            self.join()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def join(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        self.join()
+        latest = os.path.join(self.dir, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                s = int(f.read().strip())
+            if os.path.exists(os.path.join(self.dir, f"step_{s}", "manifest.json")):
+                return s
+        # fall back to scanning complete checkpoints
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        """Restore into the structure of `like` (a pytree of arrays/structs)."""
+        self.join()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, _ in flat:
+            key = _path_key(path)
+            leaves.append(_load_leaf(d, key, manifest["leaves"][key]))
+        return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                steps.append(int(m.group(1)))
+        for s in sorted(steps)[: -self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)

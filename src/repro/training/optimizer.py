@@ -1,0 +1,88 @@
+"""Optimizer: AdamW with WSD (warmup-stable-decay) schedule (MiniCPM-style).
+
+No optax dependency: states are explicit pytrees so the sharding rules can
+annotate them (fp32 m/v sharded like their parameters).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # WSD schedule
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # i32 scalar
+    m: Any  # pytree like params (f32)
+    v: Any  # pytree like params (f32)
+
+
+def wsd_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Warmup -> stable -> (cosine-free) linear decay to min_lr_frac."""
+    s = step.astype(jnp.float32)
+    warm = cfg.lr * (s + 1.0) / max(1, cfg.warmup_steps)
+    stable = jnp.float32(cfg.lr)
+    t = (s - cfg.warmup_steps - cfg.stable_steps) / max(1, cfg.decay_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    decay = cfg.lr * (1.0 - (1.0 - cfg.min_lr_frac) * t)
+    lr = jnp.where(s < cfg.warmup_steps, warm, jnp.where(t > 0, decay, stable))
+    return lr
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    cfg: OptimizerConfig, params, grads, state: OptState
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step with grad clipping + WSD LR. Returns (params', state', metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = wsd_schedule(cfg, state.step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_p, OptState(step=step, m=new_m, v=new_v), metrics

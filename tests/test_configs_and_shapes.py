@@ -1,0 +1,73 @@
+"""Config registry + shape-cell coverage + input_specs invariants."""
+import jax
+import pytest
+
+from repro.configs import (
+    ALL_SHAPES,
+    ASSIGNED,
+    get_config,
+    input_specs,
+    list_configs,
+    shape_applicable,
+)
+from repro.configs.shapes import ShapeSpec
+
+
+def test_registry_covers_all_assigned():
+    assert len(ASSIGNED) == 10
+    for n in ASSIGNED:
+        cfg = get_config(n)
+        assert cfg.name == n
+        smoke = get_config(n + "-smoke")
+        assert smoke.d_model <= 64 and smoke.num_layers <= 4
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("nonexistent-model")
+
+
+def test_shape_cells_are_40():
+    cells = [(a, s) for a in ASSIGNED for s in ALL_SHAPES]
+    assert len(cells) == 40
+    skips = [c for c in cells if shape_applicable(get_config(c[0]), ALL_SHAPES[c[1]])]
+    # long_500k skipped for the 8 full-attention archs
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _, s in skips)
+    runs = {(a, s) for a, s in cells} - set(skips)
+    assert ("mamba2-130m", "long_500k") in runs
+    assert ("zamba2-2.7b", "long_500k") in runs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", list(ALL_SHAPES))
+def test_input_specs_are_structs_no_allocation(arch, shape):
+    cfg = get_config(arch)
+    spec = ALL_SHAPES[shape]
+    if shape_applicable(cfg, spec):
+        pytest.skip("documented skip cell")
+    specs = input_specs(cfg, spec)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    # shape-cell invariants
+    if spec.kind == "train":
+        first = jax.tree.leaves(specs)[0]
+        assert first.shape[0] == spec.global_batch
+    if spec.kind == "decode":
+        assert specs["tokens"].shape == (spec.global_batch, 1)
+        assert specs["positions"].shape == (spec.global_batch,)
+        # the cache covers seq_len positions (attention families)
+        for name, leaf in specs["cache"].items():
+            if name in ("k", "v"):
+                assert leaf.shape[2] == spec.seq_len
+
+
+def test_smoke_config_round_trip_via_suffix():
+    cfg = get_config("grok-1-314b-smoke")
+    assert cfg.num_experts == 4 and cfg.family == "moe"
+
+
+def test_paper_proxy_config_within_nameplate():
+    cfg = get_config("minimax-m2.5-proxy")
+    assert 180e9 <= cfg.count_params() <= 280e9  # 229B class
+    assert cfg.count_active_params() <= 25e9  # A10B class (proxy)

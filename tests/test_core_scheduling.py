@@ -1,0 +1,235 @@
+"""Unit tests for the paper's algorithms (host implementations)."""
+import numpy as np
+import pytest
+
+from repro.core.lut import StepTimeLUT
+from repro.core.pacer import DeliveryPacer
+from repro.core.predictor import (
+    PrefillThroughputEstimator,
+    predict_all_finish_times,
+    predict_finish_time_fcfs,
+)
+from repro.core.request import Phase, Request, SLOSpec
+from repro.core.slack import ContinuousBatchingScheduler, SlackDecodeScheduler
+from repro.core.urgency import (
+    FCFSPrefillScheduler,
+    SJFPrefillScheduler,
+    UrgencyPlusPrefillScheduler,
+    UrgencyPrefillScheduler,
+)
+
+
+def mk_req(rid, arrival, input_len, output_len=64, ttft=8.0, tpot=0.05):
+    return Request(
+        rid=rid, arrival=arrival, input_len=input_len, output_len=output_len,
+        slo=SLOSpec(ttft=ttft, tpot=tpot),
+    )
+
+
+# ---------------------------------------------------------------- predictor
+
+def test_fcfs_finish_matches_verbatim_algorithm(rng):
+    queue = [
+        mk_req(i, float(rng.uniform(0, 10)), int(rng.integers(100, 50_000)))
+        for i in range(40)
+    ]
+    mu = 20_000.0
+    t_now = 5.0
+    fast = predict_all_finish_times(queue, t_now, mu)
+    for i, r in enumerate(queue):
+        slow = predict_finish_time_fcfs(queue, r, t_now, mu)
+        assert fast[i] == pytest.approx(slow, rel=1e-12)
+
+
+def test_fcfs_finish_monotone_in_arrival():
+    queue = [mk_req(i, float(i), 1000) for i in range(10)]
+    fin = predict_all_finish_times(queue, 0.0, 10_000.0)
+    assert np.all(np.diff(fin) >= 0)
+
+
+def test_throughput_estimator_ewma():
+    est = PrefillThroughputEstimator(mu=1000.0)
+    est.update(2000, 1.0)  # first obs replaces the seed
+    assert est.mu == pytest.approx(2000.0)
+    est.update(1000, 1.0)
+    assert 1000 < est.mu < 2000
+    est.update(0, 1.0)  # ignored
+    est.update(10, 0.0)  # ignored
+
+
+# ------------------------------------------------------------------ urgency
+
+def test_urgency_budget_and_partial_chunk():
+    queue = [mk_req(0, 0.0, 5000), mk_req(1, 0.1, 300), mk_req(2, 0.2, 400)]
+    sched = UrgencyPrefillScheduler()
+    sel = sched.select(queue, 1.0, 10_000.0, budget=1000)
+    assert sum(t for _, t in sel) <= 1000
+    total = sum(t for _, t in sel)
+    assert total == 1000  # budget filled (work exceeds budget)
+    # shorts (positive slack, small len) must precede the long request
+    order = [r.rid for r, _ in sel]
+    assert order.index(1) < order.index(0)
+    assert order.index(2) < order.index(0)
+
+
+def test_urgency_prefers_short_requests_at_equal_slack():
+    # paper's worked example: long arrived first, but the short's score is
+    # amplified by 1/len
+    long_r = mk_req(0, 0.0, 131_072)
+    short_r = mk_req(1, 0.5, 8_192)
+    sched = UrgencyPrefillScheduler()
+    sel = sched.select([long_r, short_r], 1.0, 20_000.0, budget=8192)
+    assert sel[0][0].rid == 1
+
+
+def test_urgency_negative_slack_inversion_documented():
+    """As printed, late (negative-slack) requests invert: the LONGEST ranks
+    first among them. This documents the pathology that urgency-plus fixes."""
+    mu = 10_000.0
+    # the long request makes everyone's FCFS-predicted slack negative
+    long_r = mk_req(0, 0.0, 100_000, ttft=8.0)
+    shorts = [mk_req(i, 0.01 * i, 500, ttft=8.0) for i in range(1, 4)]
+    queue = [long_r] + shorts
+    sched = UrgencyPrefillScheduler()
+    scores = sched.urgency_scores(queue, 0.5, mu)
+    assert np.all(scores < 0)
+    assert np.argmax(scores) == 0  # the long ranks first — inversion
+
+    plus = UrgencyPlusPrefillScheduler()
+    sel = plus.select(queue, 0.5, mu, budget=2000)
+    # the rescuable shorts go first under the fixed policy (most-behind first
+    # within the tier); the long is pushed behind them
+    assert set(r.rid for r, _ in sel[:3]) == {1, 2, 3}
+
+
+def test_fcfs_and_sjf_order():
+    queue = [mk_req(0, 0.0, 5000), mk_req(1, 0.1, 100)]
+    assert [r.rid for r, _ in FCFSPrefillScheduler().select(queue, 1.0, 1e4, 10_000)] == [0, 1]
+    assert [r.rid for r, _ in SJFPrefillScheduler().select(queue, 1.0, 1e4, 10_000)] == [1, 0]
+
+
+# -------------------------------------------------------------------- slack
+
+def analytic(b, s):
+    return 0.005 + 0.0002 * b + 2.4e-7 * s
+
+
+def active_req(rid, seq, n_gen, t_first, tpot=0.05):
+    r = mk_req(rid, 0.0, seq, output_len=1000, tpot=tpot)
+    r.first_token_time = t_first
+    r.decode_start = t_first
+    r.n_generated = n_gen
+    r.n_decoded = n_gen
+    r.phase = Phase.DECODE
+    return r
+
+
+def test_slack_packs_shorts_and_delays_straggler():
+    lut = StepTimeLUT(analytic=analytic)
+    sched = SlackDecodeScheduler(lut, slo_margin=1.0)
+    t = 10.0
+    shorts = [active_req(i, 2000, 10, t - 0.2) for i in range(20)]  # big bank
+    straggler = active_req(99, 131_072, 10, t - 0.2)
+    batch, delayed = sched.select(shorts + [straggler], t)
+    assert straggler not in batch
+    assert len(batch) >= 10
+
+
+def test_slack_fallback_decodes_all():
+    lut = StepTimeLUT(analytic=analytic)
+    sched = SlackDecodeScheduler(lut, slo_margin=1.0)
+    t = 10.0
+    # zero bank: elapsed exactly n_gen * tpot, so s ~ tpot - t1 < t_step
+    reqs = [active_req(i, 100_000, 10, t - 10 * 0.05) for i in range(4)]
+    batch, delayed = sched.select(reqs, t)
+    assert len(batch) == len(reqs) and not delayed
+
+
+def test_slack_eq2_value():
+    lut = StepTimeLUT(analytic=analytic)
+    sched = SlackDecodeScheduler(lut, slo_margin=1.0, actionable_slack=False)
+    r = active_req(0, 4096, 3, t_first=100.0)
+    s = sched.slack(r, 100.1)
+    expected = 0.05 * 4 - 0.1 - lut.lookup(1, 4096)
+    assert s == pytest.approx(expected, rel=1e-9)
+
+
+def test_continuous_batching_takes_everything():
+    lut = StepTimeLUT(analytic=analytic)
+    sched = ContinuousBatchingScheduler(lut)
+    reqs = [active_req(i, 1000 * (i + 1), 5, 9.0) for i in range(7)]
+    batch, delayed = sched.select(reqs, 10.0)
+    assert len(batch) == 7 and not delayed
+
+
+# ---------------------------------------------------------------------- LUT
+
+def test_lut_running_mean_and_fallback():
+    lut = StepTimeLUT(analytic=analytic, seed_offline=False)
+    assert lut.lookup(4, 10_000) == pytest.approx(analytic(4, 10_000))
+    lut.update(4, 10_000, 0.05)
+    lut.update(4, 10_000, 0.07)
+    assert lut.lookup(4, 10_000) == pytest.approx(0.06)
+    # bucket neighbors unaffected
+    assert lut.lookup(64, 10_000) == pytest.approx(analytic(64, 10_000))
+
+
+def test_lut_seeded_offline_counts_as_observation():
+    lut = StepTimeLUT(analytic=analytic)
+    seed = analytic(1, 512)
+    lut.update(1, 512, 3 * seed)
+    assert lut.lookup(1, 512) == pytest.approx(2 * seed)
+
+
+def test_lut_state_roundtrip():
+    lut = StepTimeLUT(analytic=analytic)
+    lut.update(2, 2000, 0.123)
+    st = lut.state_dict()
+    lut2 = StepTimeLUT(analytic=analytic)
+    lut2.load_state_dict(st)
+    assert lut2.lookup(2, 2000) == pytest.approx(lut.lookup(2, 2000))
+
+
+# -------------------------------------------------------------------- pacer
+
+def test_pacer_immediate_passthrough():
+    p = DeliveryPacer(mode="immediate")
+    times = [1.0, 1.01, 1.02]
+    assert p.delivery_times(times, 1.0, 0.05) == times
+
+
+def test_pacer_paced_monotone_and_slo_safe():
+    p = DeliveryPacer(mode="paced", pace_fraction=0.9)
+    gen = [1.0, 1.001, 1.002, 1.003, 2.0]
+    out = p.delivery_times(gen, 1.0, 0.05)
+    assert all(b >= a for a, b in zip(out, out[1:]))
+    assert all(d >= g for d, g in zip(out, gen))
+    # mean ITL within the SLO
+    itl = (out[-1] - out[0]) / (len(out) - 1)
+    assert itl <= 0.05 * 5  # loose: late generation dominates
+
+
+# ------------------------------------------------------------------ request
+
+def test_request_metrics():
+    r = mk_req(0, 10.0, 100, output_len=3)
+    r.first_token_time = 11.0
+    r.token_times = [11.0, 11.04, 11.08]
+    r.n_generated = 3
+    r.done_time = 11.08
+    r.phase = Phase.DONE
+    assert r.ttft() == pytest.approx(1.0)
+    assert r.mean_tpot() == pytest.approx(0.04)
+    assert r.meets_ttft() and r.meets_tpot() and r.meets_e2e()
+    assert r.decode_tput() == pytest.approx(3 / 0.08)
+
+
+def test_request_restart_resets_prefill():
+    r = mk_req(0, 0.0, 100)
+    r.prefilled_tokens = 100
+    r.prefill_finish = 1.0
+    r.decode_start = 1.5
+    r.reset_for_restart()
+    assert r.remaining_prefill_tokens == 100
+    assert r.restarts == 1
+    assert r.decode_start is None

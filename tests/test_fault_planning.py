@@ -1,0 +1,49 @@
+"""Fault-tolerance policy layer: re-mesh planning under pod degradation."""
+import pytest
+
+from repro.dist.fault import FleetState, plan_mesh, plan_recovery
+
+
+def test_healthy_fleet_keeps_production_mesh():
+    plan = plan_mesh(FleetState(pods=(256, 256)))
+    assert plan.shape == (2, 16, 16)
+    assert plan.axes == ("pod", "data", "model")
+    assert not plan.dropped_pods
+
+
+def test_partial_pod_clamps_rectangle():
+    plan = plan_mesh(FleetState(pods=(256, 200)))  # pod 1 lost 56 chips
+    assert plan.shape == (2, 12, 16)  # 12*16=192 <= 200, common slice
+    assert plan.chips == 384
+
+
+def test_dying_pod_is_shed():
+    plan = plan_mesh(FleetState(pods=(256, 100)))  # below 50% health
+    assert plan.shape == (16, 16)
+    assert plan.axes == ("data", "model")
+    assert plan.dropped_pods == (1,)
+
+
+def test_all_dead_raises():
+    with pytest.raises(RuntimeError):
+        plan_mesh(FleetState(pods=(10, 10)))
+
+
+def test_recovery_plan_narrative():
+    rec = plan_recovery(FleetState(pods=(256, 120)))
+    steps = rec.describe()
+    assert any("shed pods" in s for s in steps)
+    assert any("reset_for_restart" in s for s in steps)
+    assert any("checkpoint" in s for s in steps)
+
+
+def test_planned_mesh_is_constructible():
+    """The policy's output must be buildable by the mechanism layer."""
+    import jax
+    from repro.launch.mesh import make_mesh
+
+    plan = plan_mesh(FleetState(pods=(256,)))
+    n = len(jax.devices())
+    # scale the plan down to the test host's device count shape-compatibly
+    mesh = make_mesh((1, n), ("data", "model"))
+    assert mesh.shape["model"] == n

@@ -1,0 +1,129 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU; same code path compiles for TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.prefill_attention.ops import prefill_attention
+from repro.kernels.prefill_attention.ref import prefill_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.models.ssm import ssd_chunked
+
+_TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,dh",
+    [
+        (2, 128, 256, 4, 2, 64),
+        (1, 64, 64, 8, 8, 128),  # MHA
+        (2, 100, 300, 6, 2, 32),  # unaligned seq
+        (1, 256, 512, 4, 1, 128),  # MQA
+        (3, 32, 160, 4, 2, 16),  # tiny head dim
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_prefill_attention_kernel(b, sq, skv, hq, hkv, dh, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)), dtype)
+    offs = rng.integers(0, skv - sq + 1, size=b)
+    q_pos = jnp.asarray(offs[:, None] + np.arange(sq)[None, :], jnp.int32)
+    kv_len = jnp.asarray(offs + sq, jnp.int32)
+    out = prefill_attention(q, k, v, q_pos, kv_len, block_q=64, block_k=64)
+    ref = prefill_attention_ref(q, k, v, q_pos, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_TOL[dtype]
+    )
+
+
+def test_prefill_attention_logit_cap(rng):
+    b, sq, skv, hq, hkv, dh = 1, 64, 128, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, dh)) * 3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)) * 3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, dh)), jnp.float32)
+    q_pos = jnp.asarray(np.arange(sq)[None, :] + 64, jnp.int32)
+    kv_len = jnp.asarray([128], jnp.int32)
+    out = prefill_attention(q, k, v, q_pos, kv_len, logit_cap=30.0, block_q=64, block_k=64)
+    ref = prefill_attention_ref(q, k, v, q_pos, kv_len, logit_cap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,dh",
+    [
+        (4, 512, 8, 2, 64),
+        (2, 300, 4, 4, 128),
+        (1, 1024, 16, 2, 32),
+        (3, 96, 8, 1, 128),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_kernel(b, s, hq, hkv, dh, dtype, rng):
+    q = jnp.asarray(rng.standard_normal((b, hq, dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), dtype)
+    kv_len = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    out = decode_attention(q, k, v, kv_len, block_k=128)
+    ref = decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_TOL[dtype]
+    )
+
+
+def test_decode_attention_ignores_stale_cache_tail(rng):
+    """Entries past kv_len must not leak into the output."""
+    b, s, hq, hkv, dh = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.standard_normal((b, hq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, dh)), jnp.float32)
+    kv_len = jnp.asarray([100, 17], jnp.int32)
+    out1 = decode_attention(q, k, v, kv_len)
+    k2 = k.at[:, 200:].set(1e4)
+    v2 = v.at[:, 200:].set(-1e4)
+    out2 = decode_attention(q, k2, v2, kv_len)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+@pytest.mark.parametrize(
+    "b,l,h,p,n,chunk",
+    [
+        (2, 256, 4, 64, 32, 64),
+        (1, 100, 2, 32, 16, 32),
+        (2, 128, 8, 16, 64, 128),
+    ],
+)
+def test_ssd_scan_kernel(b, l, h, p, n, chunk, rng):
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b, l, n)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, l, n)) * 0.3, jnp.float32)
+    y, fs = ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, fsr = ssd_chunked(x, dt, A, Bm[:, :, None, :], Cm[:, :, None, :], chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fsr), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_state_feeds_decode(rng):
+    """Kernel final state must continue correctly through the recurrence."""
+    b, l, h, p, n = 1, 64, 2, 16, 8
+    x = jnp.asarray(rng.standard_normal((b, l + 1, h, p)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l + 1, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((b, l + 1, n)) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((b, l + 1, n)) * 0.3, jnp.float32)
+    # full scan over l+1
+    y_all, _ = ssd(x, dt, A, Bm, Cm, chunk=32)
+    # scan over l, then one recurrent step with the kernel's final state
+    _, fs = ssd(x[:, :l], dt[:, :l], A, Bm[:, :l], Cm[:, :l], chunk=32)
+    dA = jnp.exp(dt[:, l] * A)  # (b, h)
+    inc = jnp.einsum("bhp,bn->bhpn", x[:, l].astype(jnp.float32) * dt[:, l][..., None], Bm[:, l])
+    state = fs * dA[..., None, None] + inc
+    y_step = jnp.einsum("bn,bhpn->bhp", Cm[:, l], state)
+    np.testing.assert_allclose(
+        np.asarray(y_step), np.asarray(y_all[:, l]), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,56 @@
+"""Hypothesis property tests for the trace generator and delivery pacer."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pacer import DeliveryPacer
+from repro.sim.trace import TraceConfig, generate_trace
+
+
+@given(st.integers(0, 10_000), st.floats(0.5, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_trace_invariants(seed, qps):
+    cfg = TraceConfig(n_requests=50, qps=qps, seed=seed)
+    reqs = generate_trace(cfg)
+    assert len(reqs) == 50
+    arr = [r.arrival for r in reqs]
+    assert all(b >= a for a, b in zip(arr, arr[1:]))  # sorted arrivals
+    for r in reqs:
+        assert cfg.min_input <= r.input_len <= cfg.max_input
+        assert cfg.min_output <= r.output_len <= cfg.max_output
+    # mean inter-arrival ~ 1/qps (loose: 3x band)
+    gaps = np.diff(arr)
+    assert 1 / (3 * qps) < gaps.mean() < 3 / qps
+
+
+def test_trace_deterministic_per_seed():
+    a = generate_trace(TraceConfig(n_requests=20, seed=7))
+    b = generate_trace(TraceConfig(n_requests=20, seed=7))
+    assert [(r.arrival, r.input_len, r.output_len) for r in a] == [
+        (r.arrival, r.input_len, r.output_len) for r in b
+    ]
+
+
+gen_times = st.lists(
+    st.floats(0.0, 10.0).map(lambda x: round(x, 4)), min_size=1, max_size=30
+).map(sorted)
+
+
+@given(gen_times, st.floats(0.01, 0.2))
+@settings(max_examples=40, deadline=None)
+def test_pacer_properties(times, tpot):
+    p = DeliveryPacer(mode="paced", pace_fraction=0.9)
+    out = p.delivery_times(times, times[0], tpot)
+    assert len(out) == len(times)
+    # delivery never precedes generation and is monotone
+    assert all(d >= g for d, g in zip(out, times))
+    assert all(b >= a for a, b in zip(out, out[1:]))
+    # immediate mode is the identity
+    assert DeliveryPacer(mode="immediate").delivery_times(times, times[0], tpot) == times
+
+
+@given(gen_times, st.floats(0.01, 0.2))
+@settings(max_examples=20, deadline=None)
+def test_pacer_bank_non_negative(times, tpot):
+    p = DeliveryPacer(mode="paced")
+    for t_now in (times[0], times[len(times) // 2], times[-1] + 1.0):
+        assert p.banked(times, t_now, times[0], tpot) >= 0

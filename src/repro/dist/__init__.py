@@ -1,0 +1,32 @@
+"""Distribution layer: sharding plans, activation sharding, fault planning.
+
+Three concerns, three modules (see DESIGN.md §dist):
+
+  sharding.py      ShardingPlan + param/cache/input PartitionSpec rules with
+                   divisibility-checked fallback to replication.
+  act_sharding.py  Activation batch-axis constraints that are exact no-ops
+                   outside an explicit mesh context (single-host tests and
+                   the serving engine never pay for them).
+  fault.py         Policy layer for degraded fleets: which pods to shed,
+                   what mesh to rebuild, and the recovery step narrative.
+"""
+from repro.dist.act_sharding import constrain_batch, use_activation_sharding
+from repro.dist.fault import FleetState, plan_mesh, plan_recovery
+from repro.dist.sharding import (
+    ShardingPlan,
+    cache_pspecs,
+    input_pspecs,
+    param_pspecs,
+)
+
+__all__ = [
+    "ShardingPlan",
+    "param_pspecs",
+    "cache_pspecs",
+    "input_pspecs",
+    "constrain_batch",
+    "use_activation_sharding",
+    "FleetState",
+    "plan_mesh",
+    "plan_recovery",
+]

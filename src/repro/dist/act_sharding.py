@@ -1,0 +1,63 @@
+"""Activation sharding constraints, scoped by an explicit context.
+
+The model trunks call ``constrain_batch`` on every embedded activation so
+that, under a production mesh, XLA keeps the batch dim distributed instead
+of re-gathering between layers. Outside a ``use_activation_sharding``
+context (single-host tests, the serving engine) the call is an *exact*
+no-op — it returns its argument unchanged, so CPU numerics, dtypes, and
+tracing are untouched.
+
+Usage (launch/dryrun.py, launch/elastic.py):
+
+    plan = ShardingPlan(mesh)
+    with use_activation_sharding(mesh, plan.batch_axes):
+        jax.jit(step, ...).lower(*args).compile()
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import List, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Stack of (mesh, batch_axes): supports nested/elastic contexts and restores
+# the prior state on exit (including on exceptions).
+_ACTIVE: List[Tuple[object, Tuple[str, ...]]] = []
+
+
+def active_context():
+    """The innermost (mesh, batch_axes) context, or None. Test/debug hook."""
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Constrain dim 0 of ``x`` to the active context's batch axes.
+
+    Exact no-op (returns ``x`` itself) when no context is active, when the
+    context has no batch axes, or when the batch dim is not divisible by the
+    batch-axes extent (the divisibility-fallback rule: replicate rather
+    than force an uneven shard)."""
+    if not _ACTIVE:
+        return x
+    mesh, batch_axes = _ACTIVE[-1]
+    if not batch_axes:
+        return x
+    n = math.prod(mesh.shape[a] for a in batch_axes)
+    if n <= 0 or x.ndim == 0 or x.shape[0] % n != 0:
+        return x
+    spec = P(batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@contextmanager
+def use_activation_sharding(mesh, batch_axes):
+    """Activate batch-axis activation sharding for traces under this scope."""
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    _ACTIVE.append((mesh, tuple(batch_axes)))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()

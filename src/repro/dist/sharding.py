@@ -1,0 +1,266 @@
+"""Sharding rules: mesh-axis assignment with divisibility fallback.
+
+MaxText-style logical rules, but resolved by *dimension size* rather than by
+a per-module annotation table: every parameter / cache / input leaf asks the
+``ShardingPlan`` which mesh axes may shard each of its dims, and ``pick()``
+only grants an axis whose size divides the dim. Anything indivisible falls
+back to replication and is recorded in ``plan.fallbacks`` — the dry-run
+writes that list into its artifacts so a silent re-mesh (elastic degradation
+to a non-power-of-two rectangle) shows up as data, not as a crash.
+
+Entry points (pspec trees mirror the input tree structure exactly):
+
+  plan  = ShardingPlan(mesh, mode="train")
+  specs = param_pspecs(cfg, model.param_struct(), plan)
+  specs = cache_pspecs(cfg, cache_struct, plan)
+  specs = input_pspecs(cfg, input_specs(cfg, shape), plan)
+"""
+from __future__ import annotations
+
+import logging
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+log = logging.getLogger(__name__)
+
+# A candidate is one mesh axis name, or a tuple of names sharded jointly.
+Candidate = Union[str, Tuple[str, ...]]
+
+_MODEL_AXIS = "model"
+
+
+class ShardingPlan:
+    """Per-(mesh, mode) axis assignment state.
+
+    mode:
+      train / serve  tensor-parallel params on the model axis (default)
+      dp             pure data parallel: params fully replicated
+      zero           tensor parallel + ZeRO-style sharding of one leftover
+                     param dim across the batch axes
+    """
+
+    def __init__(self, mesh, mode: str = "train"):
+        self.mesh = mesh
+        self.mode = mode
+        self.sizes: Dict[str, int] = dict(mesh.shape)
+        self.fallbacks: List[str] = []  # human/JSON-readable fallback records
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Mesh axes the batch dim spans (everything but the model axis)."""
+        return tuple(a for a in self.mesh.axis_names if a != _MODEL_AXIS)
+
+    def _axes_of(self, cand: Candidate) -> Tuple[str, ...]:
+        return (cand,) if isinstance(cand, str) else tuple(cand)
+
+    def pick(
+        self,
+        dim_size: int,
+        candidate_axes: Sequence[Candidate],
+        used_axes: Set[str],
+        label: str,
+    ) -> Optional[Candidate]:
+        """Assign the first candidate whose mesh axes all exist, are unused
+        in this leaf, and whose combined size divides ``dim_size``. Returns
+        the candidate (str or tuple) and marks its axes used; returns None
+        (replicated) and records a fallback when no candidate fits."""
+        tried = []
+        for cand in candidate_axes:
+            axes = self._axes_of(cand)
+            if not axes:
+                continue
+            if any(a not in self.sizes for a in axes):
+                continue
+            if any(a in used_axes for a in axes):
+                continue
+            n = math.prod(self.sizes[a] for a in axes)
+            if dim_size % n == 0:
+                used_axes.update(axes)
+                return cand
+            tried.append(f"{cand}={n}")
+        if tried:
+            rec = (
+                f"{label}: dim {dim_size} not divisible by "
+                f"{', '.join(tried)} -> replicated"
+            )
+            self.fallbacks.append(rec)
+            log.info("sharding fallback: %s", rec)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# path / label helpers
+# ---------------------------------------------------------------------------
+
+def _path_parts(path) -> List[str]:
+    parts = []
+    for k in path:
+        for attr in ("key", "name", "idx"):
+            if hasattr(k, attr):
+                parts.append(str(getattr(k, attr)))
+                break
+        else:
+            parts.append(str(k))
+    return parts
+
+
+def _last_dict_key(path) -> str:
+    parts = _path_parts(path)
+    return parts[-1] if parts else ""
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _model_shardable_sizes(cfg: ModelConfig) -> Set[int]:
+    """Dim sizes eligible for the tensor-parallel (model) axis: vocab, ffn,
+    projected head dims, and the fused SSM channel dims."""
+    hd = cfg.resolved_head_dim
+    sizes = {
+        cfg.vocab_size,
+        cfg.d_ff,
+        cfg.num_heads * hd,
+        cfg.num_kv_heads * hd,
+    }
+    if cfg.ssm_state_dim:
+        di = cfg.ssm_d_inner
+        gn = cfg.ssm_ngroups * cfg.ssm_state_dim
+        sizes |= {
+            di,
+            di + 2 * gn,  # conv channels
+            2 * di + 2 * gn + cfg.ssm_num_heads,  # fused in_proj
+            cfg.ssm_num_heads,
+        }
+    sizes.discard(0)
+    return sizes
+
+
+_STACKED_CONTAINERS = {"layers", "enc_layers", "dec_layers"}
+
+
+def _n_stacked_dims(cfg: ModelConfig, parts: List[str]) -> int:
+    """Leading scan-stacked dims (replicated): 1 for layer stacks, 2 for the
+    hybrid family's (super_block, period) double stack."""
+    if not parts or parts[0] not in _STACKED_CONTAINERS:
+        return 0
+    if cfg.family == "hybrid" and parts[0] == "layers":
+        return 2
+    return 1
+
+
+def _param_spec(cfg: ModelConfig, plan: ShardingPlan, parts: List[str], shape) -> P:
+    label = ".".join(parts) or "param"
+    nd = len(shape)
+    lead = min(_n_stacked_dims(cfg, parts), nd)
+    entries: List[Optional[Candidate]] = [None] * nd
+    used: Set[str] = set()
+    model_sizes = _model_shardable_sizes(cfg)
+
+    if plan.mode != "dp":
+        # tensor parallel: shard the rightmost eligible dim on the model axis
+        for i in range(nd - 1, lead - 1, -1):
+            if shape[i] in model_sizes:
+                entries[i] = plan.pick(
+                    shape[i], [_MODEL_AXIS], used, f"{label}[{i}]"
+                )
+                if entries[i] is not None:
+                    break
+
+    if plan.mode == "zero" and plan.batch_axes:
+        # ZeRO-style: spread one leftover dim across the batch axes
+        for i in range(lead, nd):
+            if entries[i] is None and shape[i] > 1:
+                got = plan.pick(
+                    shape[i], [plan.batch_axes], used, f"{label}[{i}].zero"
+                )
+                if got is not None:
+                    entries[i] = got
+                    break
+
+    return P(*entries)
+
+
+def param_pspecs(cfg: ModelConfig, param_struct, plan: ShardingPlan):
+    """PartitionSpec tree matching ``param_struct``'s tree structure."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(cfg, plan, _path_parts(path), leaf.shape),
+        param_struct,
+    )
+
+
+# ---------------------------------------------------------------------------
+# cache rules
+# ---------------------------------------------------------------------------
+
+# KV-style leaves: (...layer stack..., B, M, H, D)
+_KV_KEYS = {"k", "v", "k_local", "v_local", "self_k", "self_v", "cross_k", "cross_v"}
+
+
+def _cache_spec(plan: ShardingPlan, key: str, shape, label: str) -> P:
+    nd = len(shape)
+    entries: List[Optional[Candidate]] = [None] * nd
+    used: Set[str] = set()
+    batch = plan.batch_axes
+
+    def assign(idx: int, cands: Sequence[Candidate], what: str) -> None:
+        if 0 <= idx < nd and cands:
+            entries[idx] = plan.pick(shape[idx], cands, used, f"{label}.{what}")
+
+    if key in _KV_KEYS:
+        assign(nd - 4, [batch], "batch")
+        assign(nd - 2, [_MODEL_AXIS], "heads")
+    elif key == "conv":  # (..., B, W-1, C)
+        assign(nd - 3, [batch], "batch")
+        assign(nd - 1, [_MODEL_AXIS], "channels")
+    elif key == "state":  # (..., B, H, P, N)
+        assign(nd - 4, [batch], "batch")
+        assign(nd - 3, [_MODEL_AXIS], "heads")
+    else:  # unknown leaf: batch-shard dim 0 if it fits, replicate the rest
+        assign(0, [batch], "batch")
+    return P(*entries)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_struct, plan: ShardingPlan):
+    """PartitionSpec tree for a decode cache (all four model families)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_spec(
+            plan, _last_dict_key(path), leaf.shape, ".".join(_path_parts(path))
+        ),
+        cache_struct,
+    )
+
+
+# ---------------------------------------------------------------------------
+# input rules
+# ---------------------------------------------------------------------------
+
+def _input_spec(plan: ShardingPlan, parts: List[str], shape) -> P:
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    entries: List[Optional[Candidate]] = [None] * nd
+    if plan.batch_axes:
+        entries[0] = plan.pick(
+            shape[0], [plan.batch_axes], set(), ".".join(parts) + ".batch"
+        )
+    return P(*entries)
+
+
+def input_pspecs(cfg: ModelConfig, input_specs, plan: ShardingPlan):
+    """Batch rule for step-function inputs: dim 0 spans the batch axes (with
+    divisibility fallback, e.g. the global_batch=1 long-context cell stays
+    replicated). A nested ``cache`` subtree uses the cache rules instead."""
+
+    def rule(path, leaf):
+        parts = _path_parts(path)
+        if "cache" in parts:
+            return _cache_spec(plan, _last_dict_key(path), leaf.shape, ".".join(parts))
+        return _input_spec(plan, parts, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(rule, input_specs)

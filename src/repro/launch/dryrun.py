@@ -62,6 +62,14 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts
 DEFAULT_MICRO = 8  # train_4k: 256-batch -> 8 microbatches of 32
 
 
+def _cost_analysis(compiled) -> Dict:
+    """jax < 0.5 returns a per-computation list of dicts; newer jax a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _ns(mesh, tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
@@ -163,7 +171,7 @@ def run_cell(
             compiled = lowered.compile()
         t_compile = time.time() - t0
 
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         ma = compiled.memory_analysis()
         hlo = compiled.as_text()
         colls = parse_collective_bytes(hlo)
@@ -212,7 +220,7 @@ def calibrate() -> Dict:
     sh_b = NamedSharding(mesh, P(None, "model"))
     fn = jax.jit(lambda x, y: x @ y, in_shardings=(sh_a, sh_b))
     compiled = fn.lower(a, b).compile()
-    flops = float(compiled.cost_analysis().get("flops", 0.0))
+    flops = float(_cost_analysis(compiled).get("flops", 0.0))
     true_global = 2.0 * n * n * n
     ratio = flops / true_global
     sem = "global" if ratio > 0.5 else "per_partition"

@@ -22,6 +22,7 @@ import jax
 
 from repro.configs import ALL_SHAPES, get_config, input_specs
 from repro.dist.act_sharding import use_activation_sharding
+from repro.dist.fault import FleetState, plan_recovery
 from repro.launch import dryrun
 from repro.launch.mesh import make_mesh
 
@@ -49,7 +50,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument(
+        "--plan-fleet",
+        default=None,
+        help="comma-separated healthy chips per pod (e.g. '256,200'): print "
+        "the dist.fault recovery narrative, then re-lower onto the planned "
+        "per-pod data x model rectangle",
+    )
     args = ap.parse_args()
+
+    if args.plan_fleet:
+        fleet = FleetState(pods=tuple(int(x) for x in args.plan_fleet.split(",")))
+        rec = plan_recovery(fleet)
+        for line in rec.describe():
+            print(line)
+        shape = rec.mesh.shape[-2:]  # per-pod data x model rectangle
+        res = check(args.arch, args.shape, shape, ("data", "model"))
+        print("planned", json.dumps(res))
+        print("elastic re-mesh from fault plan: OK")
+        return
 
     results = {}
     for name, mesh_shape in [

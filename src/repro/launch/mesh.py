@@ -11,19 +11,24 @@ from typing import Optional, Tuple
 import jax
 
 
+def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    # jax.sharding.AxisType landed after 0.4.x; older jax defaults every
+    # axis to Auto anyway, so omit the kwarg when it doesn't exist.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mk(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Elastic variant: arbitrary shapes (degraded device counts, smoke)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mk(shape, axes)
 
 
 def make_host_mesh():

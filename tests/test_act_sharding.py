@@ -1,0 +1,76 @@
+"""Activation-sharding context: exact no-op outside a mesh, state restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.act_sharding import (
+    active_context,
+    constrain_batch,
+    use_activation_sharding,
+)
+from repro.dist.sharding import ShardingPlan
+from repro.launch.mesh import make_mesh
+
+
+def _host_mesh():
+    n = len(jax.devices())
+    return make_mesh((n, 1), ("data", "model"))
+
+
+def test_constrain_batch_is_identity_outside_context():
+    for x in [
+        jnp.arange(12, dtype=jnp.bfloat16).reshape(4, 3),
+        jnp.ones((2, 3, 5), jnp.float32),
+        jnp.zeros((1,), jnp.int32),
+    ]:
+        y = constrain_batch(x)
+        assert y is x  # exact no-op: same object, not a copy
+        assert y.dtype == x.dtype
+        np.testing.assert_array_equal(
+            np.asarray(y, np.float32), np.asarray(x, np.float32)
+        )
+
+
+def test_context_restores_prior_state_on_exit():
+    assert active_context() is None
+    mesh = _host_mesh()
+    with use_activation_sharding(mesh, ("data",)):
+        assert active_context() == (mesh, ("data",))
+        with use_activation_sharding(mesh, ("data", "model")):
+            assert active_context() == (mesh, ("data", "model"))
+        assert active_context() == (mesh, ("data",))
+    assert active_context() is None
+
+
+def test_context_restores_state_on_exception():
+    mesh = _host_mesh()
+    try:
+        with use_activation_sharding(mesh, ("data",)):
+            raise ValueError("boom")
+    except ValueError:
+        pass
+    assert active_context() is None
+    x = jnp.ones((4, 2))
+    assert constrain_batch(x) is x
+
+
+def test_constrain_applies_under_context_and_preserves_values():
+    mesh = _host_mesh()
+    plan = ShardingPlan(mesh)
+    x = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+    with use_activation_sharding(mesh, plan.batch_axes):
+        y = jax.jit(constrain_batch)(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert y.dtype == x.dtype
+
+
+def test_indivisible_batch_falls_back_to_identity():
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    n = mesh.shape["data"]
+    x = jnp.ones((n + 1 if n > 1 else 3, 2))
+    with use_activation_sharding(mesh, ("data",)):
+        y = constrain_batch(x)
+    if n > 1:
+        assert y is x  # batch not divisible by the data axis: replicated
+    else:
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))

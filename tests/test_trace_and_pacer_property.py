@@ -1,5 +1,8 @@
 """Hypothesis property tests for the trace generator and delivery pacer."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pacer import DeliveryPacer

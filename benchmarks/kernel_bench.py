@@ -68,14 +68,17 @@ def kernel_rows() -> List[str]:
 
 
 def scheduler_rows() -> List[str]:
-    """Decision latency of the schedulers at production queue sizes."""
+    """Decision latency of every registered policy at production queue sizes.
+
+    Policies are constructed through the repro.policies registry, so a newly
+    registered policy is benchmarked automatically.
+    """
     rows = []
     rng = np.random.default_rng(0)
     from repro.core import jax_sched
     from repro.core.lut import StepTimeLUT
     from repro.core.request import Phase, Request, SLOSpec
-    from repro.core.slack import SlackDecodeScheduler
-    from repro.core.urgency import UrgencyPrefillScheduler
+    from repro.policies import available_policies, make_decode, make_prefill
     from repro.sim.costmodel import PAPER_COST_MODEL as cm
 
     n = 256
@@ -85,11 +88,14 @@ def scheduler_rows() -> List[str]:
                     input_len=int(rng.integers(100, 100_000)), output_len=200,
                     slo=SLOSpec())
         queue.append(r)
-    sched = UrgencyPrefillScheduler()
-    t0 = time.perf_counter()
-    for _ in range(20):
-        sched.select(queue, 5.0, 20_000.0, 8192)
-    rows.append(f"urgency_select_numpy_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host")
+    for pname in available_policies()["prefill"]:
+        sched = make_prefill(pname)
+        t0 = time.perf_counter()
+        for _ in range(20):
+            sched.select(queue, 5.0, 20_000.0, 8192)
+        rows.append(
+            f"prefill_select_{pname}_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host"
+        )
 
     arr = jnp.asarray([r.arrival for r in queue], jnp.float32)
     lens = jnp.asarray([r.input_len for r in queue], jnp.float32)
@@ -113,11 +119,14 @@ def scheduler_rows() -> List[str]:
         r.n_decoded = r.n_generated
         r.phase = Phase.DECODE
         active.append(r)
-    dsched = SlackDecodeScheduler(lut)
-    t0 = time.perf_counter()
-    for _ in range(20):
-        dsched.select(active, 10.0)
-    rows.append(f"slack_select_numpy_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host")
+    for dname in available_policies()["decode"]:
+        dsched = make_decode(dname, lut)
+        t0 = time.perf_counter()
+        for _ in range(20):
+            dsched.select(active, 10.0)
+        rows.append(
+            f"decode_select_{dname}_n{n},{(time.perf_counter()-t0)/20*1e6:.0f},host"
+        )
 
     be, se, tab = (jnp.asarray(x) for x in lut.as_arrays())
     seqs = jnp.asarray([r.seq_len for r in active], jnp.int32)

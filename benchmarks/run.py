@@ -18,6 +18,14 @@ def main() -> None:
     print("name,value,derived")
     t0 = time.perf_counter()
 
+    # the policy surface under test, straight from the registry (the same
+    # enumeration the simulator, engine, and CLI consume)
+    from repro.policies import available_policies
+
+    pol = available_policies()
+    print(f"policy_registry,{len(pol['prefill'])}+{len(pol['decode'])},"
+          f"prefill={'/'.join(pol['prefill'])};decode={'/'.join(pol['decode'])}")
+
     from benchmarks import paper_figs
 
     for fn in [

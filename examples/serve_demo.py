@@ -2,8 +2,12 @@
 
 Serves a batch of requests through the chunked-prefill engine + slot-based
 decode engine with Kairos scheduling, then repeats with the DistServe
-baseline and prints per-request SLO outcomes. Greedy tokens are verified
-identical across policies (scheduling changes timing, never tokens).
+baseline and prints per-request SLO outcomes. Both runs go through the
+streaming `ServeSession` API (`submit` / `step` / per-token callbacks);
+policies are constructed by name through the `repro.policies` registry.
+Greedy tokens are verified identical across policies (scheduling changes
+timing, never tokens), and a final section shows admission control shedding
+requests when the queue depth is bounded.
 
     PYTHONPATH=src python examples/serve_demo.py
 """
@@ -14,6 +18,7 @@ from repro.configs import get_config
 from repro.core.request import Phase, Request, SLOSpec
 from repro.models import build_model
 from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.session import ServeSession
 
 
 def make_requests(cfg, n=6, seed=0):
@@ -48,7 +53,14 @@ def main() -> None:
             prefill_policy=policy, decode_policy=dpolicy,
         )
         server = DisaggServer(model, params, ecfg)
-        outs = server.serve(reqs)
+        n_streamed = [0]
+
+        # the per-token callback is where a real frontend would flush
+        # tokens to the client; run() is the canonical arrival-replay loop
+        session = ServeSession(
+            server, on_token=lambda req, tok, t: n_streamed.__setitem__(0, n_streamed[0] + 1)
+        )
+        outs = session.run(reqs)
         results[policy] = outs
         print(f"\n== {policy} + {dpolicy} ==")
         for r, _ in reqs:
@@ -57,7 +69,9 @@ def main() -> None:
                 f"  rid={r.rid} in={r.input_len:3d} ttft={r.ttft():6.2f}s "
                 f"mean_itl={r.mean_tpot()*1e3:7.1f}ms meets_e2e={r.meets_e2e()}"
             )
-        print(f"  LUT cells observed: {int(server.lut.count.sum())}, "
+        assert n_streamed[0] == sum(len(v) for v in outs.values())
+        print(f"  tokens streamed via on_token: {n_streamed[0]}, "
+              f"LUT cells observed: {int(server.lut.count.sum())}, "
               f"mu_prefill={server.mu.mu:.0f} tok/s")
 
     same = all(
@@ -66,6 +80,21 @@ def main() -> None:
     )
     print(f"\ntokens identical across schedulers: {same}")
     assert same
+
+    # admission control: bounded queue depth sheds the burst's tail
+    reqs = make_requests(cfg)
+    server = DisaggServer(
+        model, params, EngineConfig(max_slots=8, max_len=96, chunk_size=16)
+    )
+    session = ServeSession(server, max_queue_depth=3)
+    for req, prompt in reqs:
+        session.submit(req, prompt)  # all at once: a burst
+    while session.has_work:
+        session.step()
+    s = session.summary()
+    print(f"burst of {s['submitted']} at queue depth 3: "
+          f"served {s['completed']}, shed {s['rejected']} (rids {s['rejected_rids']})")
+    assert s["rejected"] > 0 and s["completed"] == s["accepted"]
 
 
 if __name__ == "__main__":

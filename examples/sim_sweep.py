@@ -4,6 +4,7 @@
 """
 import argparse
 
+from repro.policies import available_policies
 from repro.sim.metrics import summarize
 from repro.sim.simulator import (
     FaultPlan,
@@ -30,12 +31,19 @@ def main() -> None:
             cells.append(f"{s['ttft']:.2f} {s['tpot']:.2f} {s['e2e']:.2f} {s['decode_tput_p50']:5.1f}")
         print(f"{qps:4.1f} | {cells[0]:^24} | {cells[1]:^24} | {cells[2]:^24}")
 
-    # ablation: prefill policies with continuous decode
+    # ablation: every registered prefill policy with continuous decode (the
+    # registry enumeration means a newly registered policy joins the sweep)
     print("\nPrefill-policy ablation (QPS 3.0, continuous decode):")
     reqs = generate_trace(TraceConfig(n_requests=args.n, qps=3.0, seed=1))
-    for pol in ("fcfs", "sjf", "edf", "kairos-urgency", "kairos-urgency-plus"):
+    for pol in available_policies()["prefill"]:
         s = summarize(run_policy(reqs, pol, "continuous"))
         print(f"  {pol:22s} ttft={s['ttft']:.2f} e2e={s['e2e']:.2f}")
+
+    # decode-policy ablation with urgency prefill
+    print("\nDecode-policy ablation (QPS 3.0, kairos-urgency prefill):")
+    for pol in available_policies()["decode"]:
+        s = summarize(run_policy(reqs, "kairos-urgency", pol))
+        print(f"  {pol:22s} tpot={s['tpot']:.2f} e2e={s['e2e']:.2f}")
 
     # fault tolerance: decode node dies at t=30s
     print("\nFault injection (decode node dies at t=30 s, 5 s recovery):")

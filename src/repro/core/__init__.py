@@ -1,8 +1,12 @@
-"""Kairos core: the paper's scheduling contribution.
+"""Kairos core: the paper's scheduling substrate.
 
-Host control plane (numpy): request model, Alg.1/2/3, LUT, pacer, baselines.
-Device data plane (jax): jittable mirrors in jax_sched (property-tested to
-match the host implementations exactly).
+Host control plane (numpy): request model, finish-time predictor, LUT,
+pacer. Device data plane (jax): jittable mirrors in jax_sched
+(property-tested to match the host implementations exactly).
+
+The scheduling *policies* themselves (Alg. 1/3 + baselines) live in
+``repro.policies`` — a registry both the simulator and the engine construct
+from, so there is exactly one place a policy name means something.
 """
 from repro.core.lut import StepTimeLUT
 from repro.core.pacer import DeliveryPacer
@@ -12,18 +16,6 @@ from repro.core.predictor import (
     predict_finish_time_fcfs,
 )
 from repro.core.request import Phase, Request, SLOSpec
-from repro.core.slack import (
-    DECODE_SCHEDULERS,
-    ContinuousBatchingScheduler,
-    SlackDecodeScheduler,
-)
-from repro.core.urgency import (
-    PREFILL_SCHEDULERS,
-    EDFPrefillScheduler,
-    FCFSPrefillScheduler,
-    SJFPrefillScheduler,
-    UrgencyPrefillScheduler,
-)
 
 __all__ = [
     "StepTimeLUT",
@@ -34,12 +26,4 @@ __all__ = [
     "Phase",
     "Request",
     "SLOSpec",
-    "DECODE_SCHEDULERS",
-    "ContinuousBatchingScheduler",
-    "SlackDecodeScheduler",
-    "PREFILL_SCHEDULERS",
-    "EDFPrefillScheduler",
-    "FCFSPrefillScheduler",
-    "SJFPrefillScheduler",
-    "UrgencyPrefillScheduler",
 ]

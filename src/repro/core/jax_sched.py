@@ -2,7 +2,8 @@
 
 Real deployments keep scheduling on the host, but at multi-pod scale the
 scheduler itself becomes a hot loop (thousands of active slots, every ~10 ms).
-These versions run the *same math* as core/{predictor,urgency,slack}.py as
+These versions run the *same math* as core/predictor.py and the registered
+policies in repro/policies/{prefill,decode}.py as
 fixed-shape JAX programs over padded request-state arrays, so they can be
 fused into the device step (beyond-paper optimization) or vmapped for
 what-if sweeps. Property tests assert exact agreement with the numpy

@@ -1,7 +1,13 @@
-"""Serving launcher: disaggregated engine with Kairos scheduling.
+"""Serving launcher: disaggregated engine with registry-driven scheduling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b-smoke \
-        --requests 8 [--policy kairos-urgency] [--decode-policy kairos-slack]
+        --requests 8 [--policy kairos-urgency] [--decode-policy kairos-slack] \
+        [--queue-depth 16] [--list-policies]
+
+``--policy`` / ``--decode-policy`` accept any name registered in
+``repro.policies`` (the same registry the simulator uses); ``--list-policies``
+prints them. ``--queue-depth`` bounds the admission queue: submits beyond it
+are shed and reported in the session metrics.
 """
 from __future__ import annotations
 
@@ -11,23 +17,51 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.request import Phase, Request, SLOSpec
+from repro.core.request import Request, SLOSpec
 from repro.models import build_model
+from repro.policies import available_policies
 from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.session import ServeSession
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    pol = available_policies()
+    ap = argparse.ArgumentParser(
+        description="Disaggregated serving demo (policies from repro.policies)"
+    )
     ap.add_argument("--arch", default="llama3-8b-smoke")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-out", type=int, default=12)
-    ap.add_argument("--policy", default="kairos-urgency")
-    ap.add_argument("--decode-policy", default="kairos-slack")
+    ap.add_argument(
+        "--policy",
+        default="kairos-urgency",
+        choices=pol["prefill"],
+        help=f"prefill policy; registered: {', '.join(pol['prefill'])}",
+    )
+    ap.add_argument(
+        "--decode-policy",
+        default="kairos-slack",
+        choices=pol["decode"],
+        help=f"decode policy; registered: {', '.join(pol['decode'])}",
+    )
+    ap.add_argument(
+        "--queue-depth", type=int, default=0,
+        help="admission-control queue depth; 0 = unbounded",
+    )
+    ap.add_argument(
+        "--list-policies", action="store_true",
+        help="print registered policies and exit",
+    )
     ap.add_argument("--chunk-size", type=int, default=16)
     ap.add_argument("--ttft-slo", type=float, default=60.0)
     ap.add_argument("--tpot-slo", type=float, default=5.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.list_policies:
+        for side, names in pol.items():
+            print(f"{side}: {', '.join(names)}")
+        return
 
     cfg = get_config(args.arch).replace(dtype="float32")
     model = build_model(cfg)
@@ -49,18 +83,27 @@ def main() -> None:
     ecfg = EngineConfig(
         max_slots=8, max_len=128, chunk_size=args.chunk_size,
         prefill_policy=args.policy, decode_policy=args.decode_policy,
+        admission_queue_depth=args.queue_depth or None,
     )
     server = DisaggServer(model, params, ecfg)
-    outs = server.serve(reqs)
+
+    # drive the streaming session directly (what serve() wraps) so the
+    # admission metrics stay in hand
+    session = ServeSession(server)
+    outs = session.run(reqs)
     n_ok = 0
     for r, _ in reqs:
         ok = r.meets_e2e()
         n_ok += ok
         print(
             f"rid={r.rid} phase={r.phase.value} tokens={len(outs.get(r.rid, []))} "
-            f"ttft={r.ttft():.2f}s mean_itl={1e3*(r.mean_tpot() or 0):.0f}ms e2e_ok={ok}"
+            f"ttft={(r.ttft() or 0):.2f}s mean_itl={1e3*(r.mean_tpot() or 0):.0f}ms e2e_ok={ok}"
         )
-    print(f"E2E SLO attainment: {n_ok}/{len(reqs)}")
+    s = session.summary()
+    print(
+        f"E2E SLO attainment: {n_ok}/{len(reqs)} "
+        f"(submitted={s['submitted']} shed={s['rejected']})"
+    )
 
 
 if __name__ == "__main__":

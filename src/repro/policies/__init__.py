@@ -1,0 +1,61 @@
+"""Scheduling-policy registry: protocols, factories, and the paper's
+policies (plus baselines), shared by the simulator and the live engine.
+
+Importing this package registers every built-in policy. Public surface:
+
+    PolicySpec           name + kwargs, the unit both backends consume
+    PrefillPolicy        protocol: select(queue, t_now, mu, budget)
+    DecodePolicy         protocol: select(active, t_now) / observe(batch, t)
+    register_prefill     class decorator, @register_prefill("my-policy")
+    register_decode      class decorator (ctor takes the StepTimeLUT first)
+    make_prefill         spec|name -> PrefillPolicy
+    make_decode          spec|name, lut -> DecodePolicy
+    available_policies   {"prefill": names, "decode": names}
+"""
+from repro.policies.decode import (
+    ContinuousBatchingScheduler,
+    SlackDecodeScheduler,
+)
+from repro.policies.prefill import (
+    EDFPrefillScheduler,
+    FCFSPrefillScheduler,
+    SJFPrefillScheduler,
+    UrgencyPlusPrefillScheduler,
+    UrgencyPrefillScheduler,
+)
+from repro.policies.registry import (
+    DecodePolicy,
+    Partition,
+    PolicySpec,
+    PrefillPolicy,
+    Selection,
+    available_decode_policies,
+    available_policies,
+    available_prefill_policies,
+    make_decode,
+    make_prefill,
+    register_decode,
+    register_prefill,
+)
+
+__all__ = [
+    "ContinuousBatchingScheduler",
+    "SlackDecodeScheduler",
+    "EDFPrefillScheduler",
+    "FCFSPrefillScheduler",
+    "SJFPrefillScheduler",
+    "UrgencyPlusPrefillScheduler",
+    "UrgencyPrefillScheduler",
+    "DecodePolicy",
+    "Partition",
+    "PolicySpec",
+    "PrefillPolicy",
+    "Selection",
+    "available_decode_policies",
+    "available_policies",
+    "available_prefill_policies",
+    "make_decode",
+    "make_prefill",
+    "register_decode",
+    "register_prefill",
+]

@@ -1,23 +1,29 @@
-"""Decode-side schedulers: Kairos slack-guided adaptive batching (paper
+"""Decode-side policies: Kairos slack-guided adaptive batching (paper
 Algorithm 3) + the continuous-batching baseline (DistServe).
 
-Each decode step the scheduler partitions the active set D into a batch B to
+Each decode step the policy partitions the active set D into a batch B to
 execute now and a delayed set R_delay that idles this step. Kairos packs
 short requests whenever every active request still has enough TPOT slack.
+
+Three registered names, two classes: ``kairos-slack-greedy`` is the
+beyond-paper greedy-fill variant of ``SlackDecodeScheduler`` (see the
+``require_throughput_gain`` note below), registered with different
+construction defaults. Both backends construct these via ``make_decode`` —
+see ``repro.policies.registry``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Sequence
 
 import numpy as np
 
 from repro.core.lut import StepTimeLUT
 from repro.core.request import Request
+from repro.policies.registry import Partition, register_decode
 
-Partition = Tuple[List[Request], List[Request]]  # (batch, delayed)
 
-
+@register_decode("kairos-slack")
 @dataclass
 class SlackDecodeScheduler:
     """Paper Algorithm 3: slack-guided adaptive decode scheduling.
@@ -58,9 +64,10 @@ class SlackDecodeScheduler:
         )
 
     # require_throughput_gain=True is the paper's Alg. 3 line 13 condition.
-    # False ("greedy-fill", beyond-paper) admits any request that still fits
-    # the s_min budget: mid-length requests are no longer pinned to the SLO
-    # pace when capacity allows, at a small cost in short-request latency.
+    # False ("greedy-fill", beyond-paper, registered as kairos-slack-greedy)
+    # admits any request that still fits the s_min budget: mid-length
+    # requests are no longer pinned to the SLO pace when capacity allows, at
+    # a small cost in short-request latency.
     require_throughput_gain: bool = True
 
     def select(self, active: Sequence[Request], t_now: float) -> Partition:
@@ -98,6 +105,7 @@ class SlackDecodeScheduler:
         self.lut.update(len(batch), max(r.seq_len for r in batch), actual)
 
 
+@register_decode("continuous")
 @dataclass
 class ContinuousBatchingScheduler:
     """DistServe baseline: decode every active request each step."""
@@ -113,7 +121,8 @@ class ContinuousBatchingScheduler:
             self.lut.update(len(batch), max(r.seq_len for r in batch), actual)
 
 
-DECODE_SCHEDULERS = {
-    "kairos-slack": SlackDecodeScheduler,
-    "continuous": ContinuousBatchingScheduler,
-}
+# Beyond-paper greedy-fill variant: same class, different construction
+# defaults. The registry stamps instances with the registered name.
+register_decode("kairos-slack-greedy", require_throughput_gain=False)(
+    SlackDecodeScheduler
+)

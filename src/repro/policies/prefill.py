@@ -1,10 +1,14 @@
-"""Prefill-side schedulers: Kairos urgency (paper Algorithm 1) + baselines.
+"""Prefill-side policies: Kairos urgency (paper Algorithm 1) + baselines.
 
-A prefill scheduler's job each step: given the queue and a chunk budget `C`
+A prefill policy's job each step: given the queue and a chunk budget ``C``
 (chunked prefill, Sarathi-style), pick which requests contribute how many
 tokens to this step. Output is a list of (request, n_tokens) with
 sum(n_tokens) <= C; a request whose remaining tokens exceed the leftover
 budget gets a partial chunk (paper Alg. 1 lines 16-18).
+
+Every class here registers itself in the policy registry; both the
+simulator and the engine construct them via ``make_prefill`` — see
+``repro.policies.registry``.
 """
 from __future__ import annotations
 
@@ -15,8 +19,7 @@ import numpy as np
 
 from repro.core.predictor import predict_all_finish_times
 from repro.core.request import Request
-
-Selection = List[Tuple[Request, int]]
+from repro.policies.registry import Selection, register_prefill
 
 
 def _pack_budget(ordered: Sequence[Request], budget: int) -> Selection:
@@ -34,6 +37,7 @@ def _pack_budget(ordered: Sequence[Request], budget: int) -> Selection:
     return out
 
 
+@register_prefill("kairos-urgency")
 @dataclass
 class UrgencyPrefillScheduler:
     """Paper Algorithm 1: urgency-based priority scheduling.
@@ -70,6 +74,7 @@ class UrgencyPrefillScheduler:
         )
 
 
+@register_prefill("kairos-urgency-plus")
 @dataclass
 class UrgencyPlusPrefillScheduler:
     """Beyond-paper fix of Algorithm 1's negative-slack ordering inversion.
@@ -117,6 +122,7 @@ class UrgencyPlusPrefillScheduler:
         return _pack_budget([t[3] for t in tiers], budget)
 
 
+@register_prefill("fcfs")
 @dataclass
 class FCFSPrefillScheduler:
     """DistServe baseline: arrival order + chunked prefill."""
@@ -130,6 +136,7 @@ class FCFSPrefillScheduler:
         return _pack_budget(ordered, budget)
 
 
+@register_prefill("sjf")
 @dataclass
 class SJFPrefillScheduler:
     """Shortest-job-first (paper discusses as impractical: starves long)."""
@@ -143,6 +150,7 @@ class SJFPrefillScheduler:
         return _pack_budget(ordered, budget)
 
 
+@register_prefill("edf")
 @dataclass
 class EDFPrefillScheduler:
     """Earliest-deadline-first ablation (deadline = arrival + SLO_TTFT)."""
@@ -154,12 +162,3 @@ class EDFPrefillScheduler:
     ) -> Selection:
         ordered = sorted(queue, key=lambda r: (r.arrival + r.slo.ttft, r.rid))
         return _pack_budget(ordered, budget)
-
-
-PREFILL_SCHEDULERS = {
-    "kairos-urgency": UrgencyPrefillScheduler,
-    "kairos-urgency-plus": UrgencyPlusPrefillScheduler,
-    "fcfs": FCFSPrefillScheduler,
-    "sjf": SJFPrefillScheduler,
-    "edf": EDFPrefillScheduler,
-}

@@ -1,0 +1,64 @@
+"""Injectable clocks for the serving engine.
+
+`DisaggServer` historically called ``time.monotonic()`` directly, which made
+every engine test wall-clock-dependent (and flaky under CI load). The engine
+now reads time through a ``Clock`` object:
+
+    MonotonicClock  production default — thin wrapper over time.monotonic
+    ManualClock     tests — time advances only when the test (or the
+                    engine's own idle-sleep) says so, making TTFT/TPOT
+                    arithmetic exactly reproducible run-to-run
+
+``ManualClock.auto_step`` optionally advances time by a fixed amount per
+``monotonic()`` read, modeling "each observation costs dt" so elapsed-time
+deltas (LUT observations, prefill-throughput updates) are non-zero yet
+deterministic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    def monotonic(self) -> float: ...
+
+    def sleep(self, dt: float) -> None: ...
+
+
+@dataclass
+class MonotonicClock:
+    """Wall clock (production default)."""
+
+    def monotonic(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+@dataclass
+class ManualClock:
+    """Deterministic virtual clock for tests.
+
+    ``sleep`` advances virtual time instead of blocking, so engine idle
+    waits (e.g. for a future arrival) complete instantly and identically
+    on every run.
+    """
+
+    t: float = 0.0
+    auto_step: float = 0.0  # seconds added per monotonic() read
+
+    def monotonic(self) -> float:
+        self.t += self.auto_step
+        return self.t
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            self.t += dt
+
+    def advance(self, dt: float) -> None:
+        self.t += dt

@@ -14,22 +14,20 @@ DESIGN.md §engine-scope.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.lut import StepTimeLUT
 from repro.core.predictor import PrefillThroughputEstimator
-from repro.core.request import Phase, Request
-from repro.core.slack import ContinuousBatchingScheduler, SlackDecodeScheduler
-from repro.core.urgency import PREFILL_SCHEDULERS
+from repro.core.request import Request
 from repro.models.model import Model
 from repro.models.transformer import chunk_prefill_step, decode_step
+from repro.policies import PolicySpec, make_decode, make_prefill
+from repro.serving.clock import Clock, MonotonicClock
 from repro.serving.kvcache import SlotAllocator, gather_slots, scatter_slots
 from repro.serving.sampler import sample
 
@@ -50,11 +48,16 @@ class EngineConfig:
     decode_buckets: Tuple[int, ...] = (1, 2, 4, 8)
     eos_token: int = 1
     temperature: float = 0.0
-    prefill_policy: str = "kairos-urgency"
-    decode_policy: str = "kairos-slack"
+    # policy specs resolved through the repro.policies registry: a registered
+    # name, or a PolicySpec carrying construction kwargs
+    prefill_policy: Union[str, PolicySpec] = "kairos-urgency"
+    decode_policy: Union[str, PolicySpec] = "kairos-slack"
     slo_margin: float = 0.9
     # virtual time: 1.0 => wall clock; larger stretches SLOs for slow CPUs
     time_scale: float = 1.0
+    # ServeSession admission control: max requests waiting in the prefill
+    # queue before submits are shed; None = unbounded (offline serve default)
+    admission_queue_depth: Optional[int] = None
 
 
 @dataclass
@@ -165,115 +168,63 @@ class DisaggServer:
     runs unchanged while CPU steps are orders slower than the H200 testbed.
     """
 
-    def __init__(self, model: Model, params: Dict, ecfg: EngineConfig):
+    def __init__(
+        self,
+        model: Model,
+        params: Dict,
+        ecfg: EngineConfig,
+        clock: Optional[Clock] = None,
+    ):
         self.model, self.ecfg = model, ecfg
+        self.clock: Clock = clock if clock is not None else MonotonicClock()
         self.prefill = PrefillEngine(model, params, ecfg)
         self.decode = DecodeEngine(model, params, ecfg)
-        self.prefill_sched = PREFILL_SCHEDULERS[ecfg.prefill_policy]()
+        # schedulers come from the shared policy registry — the same specs
+        # (and the same classes) the simulator constructs from
+        self.prefill_sched = make_prefill(ecfg.prefill_policy)
         analytic = lambda b, s: 1e-3 * (1 + 0.05 * b + s / 4096.0)
         self.lut = StepTimeLUT(analytic=analytic, seq_buckets=[16, 32, 64, 128, 256, 512])
-        if ecfg.decode_policy == "kairos-slack":
-            self.decode_sched = SlackDecodeScheduler(self.lut, slo_margin=ecfg.slo_margin)
-        else:
-            self.decode_sched = ContinuousBatchingScheduler(self.lut)
+        # slo_margin is a soft default: applied to policies that take it
+        # (slack variants), dropped for those that don't (continuous)
+        self.decode_sched = make_decode(
+            ecfg.decode_policy, self.lut, slo_margin=ecfg.slo_margin
+        )
         self.mu = PrefillThroughputEstimator(mu=2000.0)
         self._key = jax.random.key(0)
+        self._t0 = self.clock.monotonic()
+        self.last_session = None  # ServeSession of the most recent serve()
 
     # ------------------------------------------------------------------ time
     def _now(self) -> float:
-        return (time.monotonic() - self._t0) * self.ecfg.time_scale
+        return (self.clock.monotonic() - self._t0) * self.ecfg.time_scale
+
+    def reset_clock(self) -> None:
+        """Re-zero virtual time (arrivals are relative to this origin)."""
+        self._t0 = self.clock.monotonic()
 
     # ------------------------------------------------------------------ serve
     def serve(self, requests: List[Tuple[Request, List[int]]]) -> Dict[int, List[int]]:
         """Serve (Request, prompt_tokens) pairs; returns rid -> output tokens.
 
-        Requests arrive at req.arrival (virtual seconds).
+        Requests arrive at req.arrival (virtual seconds). This is a thin
+        offline wrapper over `ServeSession.run` (repro.serving.session).
+        With the default unbounded `EngineConfig.admission_queue_depth`
+        nothing is ever shed; if a depth IS configured, shed requests end
+        in ``Phase.FAILED`` and are absent from the returned dict — inspect
+        ``self.last_session.summary()`` (kept after every serve) for the
+        rejection metrics.
         """
-        ecfg = self.ecfg
-        self._t0 = time.monotonic()
-        pending = sorted(requests, key=lambda x: x[0].arrival)
-        queue: List[LiveRequest] = []
-        waiting_adm: List[LiveRequest] = []
-        active: List[LiveRequest] = []
-        outputs: Dict[int, List[int]] = {}
-        n_done = 0
+        from repro.serving.session import ServeSession  # avoid import cycle
 
-        while n_done < len(requests):
-            now = self._now()
-            while pending and pending[0][0].arrival <= now:
-                req, prompt = pending.pop(0)
-                req.input_len = len(prompt)
-                queue.append(LiveRequest(req=req, tokens=list(prompt)))
-
-            # ---- prefill side ------------------------------------------------
-            pq = [lr.req for lr in queue]
-            if pq:
-                sel = self.prefill_sched.select(pq, now, self.mu.mu, ecfg.chunk_size)
-                t0 = time.monotonic()
-                total = 0
-                for req, take in sel:
-                    lr = next(l for l in queue if l.req is req)
-                    logits = self.prefill.run_chunk(lr, take)
-                    total += take
-                    if logits is not None:
-                        fin = self._now()
-                        req.prefill_finish = fin
-                        req.first_token_time = fin
-                        tok = int(np.argmax(logits))
-                        lr.tokens.append(tok)
-                        outputs.setdefault(req.rid, []).append(tok)
-                        req.n_generated = 1
-                        req.token_times.append(fin)
-                        req.phase = Phase.TRANSFER
-                        queue.remove(lr)
-                        waiting_adm.append(lr)
-                elapsed = (time.monotonic() - t0) * ecfg.time_scale
-                if total:
-                    self.mu.update(total, max(elapsed, 1e-9))
-
-            # ---- admission (KV transfer) ------------------------------------
-            for lr in list(waiting_adm):
-                if self.decode.admit(lr):
-                    lr.req.phase = Phase.DECODE
-                    lr.req.decode_start = self._now()
-                    waiting_adm.remove(lr)
-                    active.append(lr)
-
-            # ---- decode side -------------------------------------------------
-            if active:
-                batch_reqs, _ = self.decode_sched.select([l.req for l in active], self._now())
-                batch = [l for l in active if l.req in batch_reqs]
-                self._key, sub = jax.random.split(self._key)
-                t0 = time.monotonic()
-                toks = self.decode.step(batch, sub)
-                step_t = (time.monotonic() - t0) * ecfg.time_scale
-                tend = self._now()
-                self.decode_sched.observe([l.req for l in batch], step_t)
-                for lr, tok in zip(batch, toks):
-                    r = lr.req
-                    tok = int(tok)
-                    lr.tokens.append(tok)
-                    outputs.setdefault(r.rid, []).append(tok)
-                    r.n_generated += 1
-                    r.n_decoded += 1
-                    r.token_times.append(tend)
-                    done = (
-                        tok == ecfg.eos_token
-                        or r.n_generated >= r.output_len
-                        or r.seq_len >= ecfg.max_len - 1
-                    )
-                    if done:
-                        r.phase = Phase.DONE
-                        r.done_time = tend
-                        self.decode.release(lr)
-                        active.remove(lr)
-                        n_done += 1
-            elif not queue and not waiting_adm and pending:
-                time.sleep(min(0.001, max(0.0, pending[0][0].arrival - self._now())))
-            elif not queue and not waiting_adm and not pending:
-                break
-
-        return outputs
+        for req, prompt in requests:
+            if req.input_len != len(prompt):
+                raise ValueError(
+                    f"request rid={req.rid} declares input_len={req.input_len} "
+                    f"but prompt has {len(prompt)} tokens"
+                )
+        session = ServeSession(self)
+        self.last_session = session
+        return session.run(requests)
 
 
 def reference_generate(

@@ -1,0 +1,253 @@
+"""Streaming serve session: the non-blocking face of `DisaggServer`.
+
+The monolithic ``DisaggServer.serve(requests)`` loop is now a thin driver
+over this class. A `ServeSession` owns the in-flight request state and
+exposes the three primitives an online frontend needs:
+
+    submit(request, prompt)   admit (or shed) a request, at any time
+    step()                    advance prefill + admission + decode one round
+    on_token callbacks        per-request and session-wide streaming hooks
+
+Admission control: ``max_queue_depth`` bounds the prefill queue. A submit
+that would exceed it is *shed* — the request is marked ``Phase.FAILED``,
+counted in the session metrics (``rejected`` / ``rejected_rids``), and
+``submit`` returns False. The default (``FROM_CONFIG``) inherits
+``EngineConfig.admission_queue_depth``; pass ``None`` for explicitly
+unbounded admission regardless of the config (the config's own default is
+unbounded, which preserves historical ``serve()`` behavior).
+
+``submit`` validates that ``request.input_len == len(prompt)`` and raises
+``ValueError`` on mismatch: the declared length feeds the SLO/urgency
+arithmetic the caller set up, so silently reassigning it (as the old serve
+loop did) desyncs scheduling from the caller's intent.
+
+See DESIGN.md §session.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.request import Phase, Request
+from repro.serving.engine import DisaggServer, LiveRequest
+
+# on_token(request, token, t_virtual) — called as each token is produced.
+TokenCallback = Callable[[Request, int, float], None]
+
+# Sentinel: inherit EngineConfig.admission_queue_depth. Distinct from None,
+# which always means unbounded — so a caller can request an unbounded
+# session over a server whose config sets a depth.
+FROM_CONFIG: Any = object()
+
+
+@dataclass
+class SessionMetrics:
+    """Counters for one session's lifetime (shedding included)."""
+
+    submitted: int = 0
+    accepted: int = 0
+    rejected: int = 0  # shed by admission control
+    completed: int = 0
+    rejected_rids: List[int] = field(default_factory=list)
+
+
+class ServeSession:
+    """Incremental serving over a `DisaggServer`'s engines.
+
+    The session never blocks: ``step()`` runs at most one prefill
+    scheduling round, one admission sweep, and one decode step, then
+    returns the rids that completed. Interleave ``submit``/``step`` freely
+    — that is the whole point.
+    """
+
+    def __init__(
+        self,
+        server: DisaggServer,
+        max_queue_depth: Optional[int] = FROM_CONFIG,
+        on_token: Optional[TokenCallback] = None,
+    ):
+        self.server = server
+        self.ecfg = server.ecfg
+        if max_queue_depth is FROM_CONFIG:
+            max_queue_depth = server.ecfg.admission_queue_depth
+        self.max_queue_depth = max_queue_depth  # None = unbounded
+        self.on_token = on_token
+
+        self.queue: List[LiveRequest] = []  # waiting for / in chunked prefill
+        self.waiting_adm: List[LiveRequest] = []  # KV transfer -> decode slot
+        self.active: List[LiveRequest] = []  # decoding
+        self.outputs: Dict[int, List[int]] = {}
+        self.requests: List[Request] = []  # every submitted request, shed too
+        self.metrics = SessionMetrics()
+        self._callbacks: Dict[int, TokenCallback] = {}
+
+    # ------------------------------------------------------------- submit
+    def submit(
+        self,
+        request: Request,
+        prompt: Sequence[int],
+        on_token: Optional[TokenCallback] = None,
+    ) -> bool:
+        """Admit a request; returns False (and sheds it) when the prefill
+        queue is at ``max_queue_depth``. Raises ValueError if the declared
+        ``input_len`` does not match the prompt."""
+        if request.input_len != len(prompt):
+            raise ValueError(
+                f"request rid={request.rid} declares input_len={request.input_len} "
+                f"but prompt has {len(prompt)} tokens; the SLO/urgency arithmetic "
+                f"is computed from input_len, so they must agree"
+            )
+        self.metrics.submitted += 1
+        self.requests.append(request)
+        if self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth:
+            request.phase = Phase.FAILED
+            self.metrics.rejected += 1
+            self.metrics.rejected_rids.append(request.rid)
+            return False
+        self.metrics.accepted += 1
+        self.queue.append(LiveRequest(req=request, tokens=list(prompt)))
+        if on_token is not None:
+            self._callbacks[request.rid] = on_token
+        return True
+
+    # -------------------------------------------------------------- state
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.waiting_adm or self.active)
+
+    def _emit(self, req: Request, tok: int, t: float) -> None:
+        self.outputs.setdefault(req.rid, []).append(tok)
+        cb = self._callbacks.get(req.rid)
+        if cb is not None:
+            cb(req, tok, t)
+        if self.on_token is not None:
+            self.on_token(req, tok, t)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[int]:
+        """Advance the session one round; returns rids completed this round."""
+        srv = self.server
+        ecfg = self.ecfg
+        clock = srv.clock
+        completed: List[int] = []
+        now = srv._now()
+
+        # ---- prefill side ------------------------------------------------
+        pq = [lr.req for lr in self.queue]
+        if pq:
+            sel = srv.prefill_sched.select(pq, now, srv.mu.mu, ecfg.chunk_size)
+            t0 = clock.monotonic()
+            total = 0
+            for req, take in sel:
+                lr = next(l for l in self.queue if l.req is req)
+                logits = srv.prefill.run_chunk(lr, take)
+                total += take
+                if logits is not None:
+                    fin = srv._now()
+                    req.prefill_finish = fin
+                    req.first_token_time = fin
+                    tok = int(np.argmax(logits))
+                    lr.tokens.append(tok)
+                    req.n_generated = 1
+                    req.token_times.append(fin)
+                    req.phase = Phase.TRANSFER
+                    self.queue.remove(lr)
+                    self.waiting_adm.append(lr)
+                    self._emit(req, tok, fin)
+            elapsed = (clock.monotonic() - t0) * ecfg.time_scale
+            if total:
+                srv.mu.update(total, max(elapsed, 1e-9))
+
+        # ---- admission (KV transfer) ------------------------------------
+        for lr in list(self.waiting_adm):
+            if srv.decode.admit(lr):
+                lr.req.phase = Phase.DECODE
+                lr.req.decode_start = srv._now()
+                self.waiting_adm.remove(lr)
+                self.active.append(lr)
+
+        # ---- decode side -------------------------------------------------
+        if self.active:
+            batch_reqs, _ = srv.decode_sched.select(
+                [l.req for l in self.active], srv._now()
+            )
+            batch = [l for l in self.active if l.req in batch_reqs]
+            srv._key, sub = jax.random.split(srv._key)
+            t0 = clock.monotonic()
+            toks = srv.decode.step(batch, sub)
+            step_t = (clock.monotonic() - t0) * ecfg.time_scale
+            tend = srv._now()
+            srv.decode_sched.observe([l.req for l in batch], step_t)
+            for lr, tok in zip(batch, toks):
+                r = lr.req
+                tok = int(tok)
+                lr.tokens.append(tok)
+                r.n_generated += 1
+                r.n_decoded += 1
+                r.token_times.append(tend)
+                self._emit(r, tok, tend)
+                done = (
+                    tok == ecfg.eos_token
+                    or r.n_generated >= r.output_len
+                    or r.seq_len >= ecfg.max_len - 1
+                )
+                if done:
+                    r.phase = Phase.DONE
+                    r.done_time = tend
+                    srv.decode.release(lr)
+                    self.active.remove(lr)
+                    self.metrics.completed += 1
+                    completed.append(r.rid)
+        return completed
+
+    # ----------------------------------------------------------------- run
+    def run(self, requests: Sequence) -> Dict[int, List[int]]:
+        """Offline driver — the one canonical submit-when-arrived/step loop.
+
+        Submits each (Request, prompt_tokens) pair once its ``arrival``
+        (virtual seconds) passes, steps until drained, returns rid ->
+        output tokens. ``DisaggServer.serve()`` and the CLI/demo drivers
+        all call this rather than re-implementing the loop.
+        """
+        srv = self.server
+        srv.reset_clock()
+        pending = sorted(requests, key=lambda x: x[0].arrival)
+        while pending or self.has_work:
+            now = srv._now()
+            while pending and pending[0][0].arrival <= now:
+                req, prompt = pending.pop(0)
+                self.submit(req, prompt)
+            if self.has_work:
+                self.step()
+            elif pending:
+                srv.clock.sleep(
+                    min(0.001, max(0.0, pending[0][0].arrival - srv._now()))
+                )
+        return self.outputs
+
+    # ------------------------------------------------------------- metrics
+    def summary(self) -> Dict[str, Any]:
+        """Session counters + per-request TTFT/TPOT (shed requests included,
+        with null latency metrics)."""
+        per = [
+            dict(
+                rid=r.rid,
+                phase=r.phase.value,
+                ttft=r.ttft(),
+                mean_tpot=r.mean_tpot(),
+                meets_e2e=r.meets_e2e() if r.phase == Phase.DONE else False,
+            )
+            for r in self.requests
+        ]
+        m = self.metrics
+        return dict(
+            submitted=m.submitted,
+            accepted=m.accepted,
+            rejected=m.rejected,
+            completed=m.completed,
+            rejected_rids=list(m.rejected_rids),
+            requests=per,
+        )

@@ -2,8 +2,9 @@
 
 Two engine clocks (prefill instance, decode instance) advance through a
 shared timeline; arrivals are injected as the clocks pass them. The
-simulator consumes the *same* core/ scheduler objects as the real JAX
-engine — the paper's algorithms are exercised verbatim.
+simulator constructs its schedulers through the *same* policy registry
+(`repro.policies`) as the real JAX engine — the paper's algorithms are
+exercised verbatim, and any `PolicySpec` accepted here is accepted there.
 
 Fault injection: `FaultPlan` kills the decode instance at given times; all
 in-flight decode requests lose their KV and re-enter the prefill queue
@@ -12,7 +13,7 @@ in-flight decode requests lose their KV and re-enter the prefill queue
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -20,8 +21,7 @@ from repro.core.lut import StepTimeLUT
 from repro.core.pacer import DeliveryPacer
 from repro.core.predictor import PrefillThroughputEstimator
 from repro.core.request import Phase, Request
-from repro.core.slack import ContinuousBatchingScheduler, SlackDecodeScheduler
-from repro.core.urgency import PREFILL_SCHEDULERS, FCFSPrefillScheduler
+from repro.policies import PolicySpec, make_decode, make_prefill
 from repro.sim.costmodel import CalibratedCostModel, PAPER_COST_MODEL
 
 
@@ -67,8 +67,8 @@ class DisaggSimulator:
     def __init__(
         self,
         cost: CalibratedCostModel = PAPER_COST_MODEL,
-        prefill_policy: str = "kairos-urgency",
-        decode_policy: str = "kairos-slack",
+        prefill_policy: Union[str, PolicySpec] = "kairos-urgency",
+        decode_policy: Union[str, PolicySpec] = "kairos-slack",
         sim_cfg: SimConfig = SimConfig(),
         fault_plan: FaultPlan = FaultPlan(),
         lut: Optional[StepTimeLUT] = None,
@@ -79,16 +79,11 @@ class DisaggSimulator:
         self.recovery = fault_plan.recovery_time
         self.rng = np.random.default_rng(sim_cfg.seed)
 
-        self.prefill_sched = PREFILL_SCHEDULERS[prefill_policy]()
+        # policies come from the shared registry — the same specs (and the
+        # same classes) the live engine constructs from
+        self.prefill_sched = make_prefill(prefill_policy)
         self.lut = lut or StepTimeLUT(analytic=cost.decode_lut_seed)
-        if decode_policy == "kairos-slack":
-            self.decode_sched = SlackDecodeScheduler(self.lut)
-        elif decode_policy == "kairos-slack-greedy":
-            self.decode_sched = SlackDecodeScheduler(self.lut, require_throughput_gain=False)
-        elif decode_policy == "continuous":
-            self.decode_sched = ContinuousBatchingScheduler(self.lut)
-        else:
-            raise ValueError(decode_policy)
+        self.decode_sched = make_decode(decode_policy, self.lut)
         self.mu = PrefillThroughputEstimator(mu=cost.prefill_throughput_seed())
         self.pacer = DeliveryPacer(mode=sim_cfg.pacer_mode)
 
@@ -302,8 +297,8 @@ class DisaggSimulator:
 
 def run_policy(
     requests: Sequence[Request],
-    prefill_policy: str,
-    decode_policy: str,
+    prefill_policy: Union[str, PolicySpec],
+    decode_policy: Union[str, PolicySpec],
     cost: CalibratedCostModel = PAPER_COST_MODEL,
     sim_cfg: SimConfig = SimConfig(),
     fault_plan: FaultPlan = FaultPlan(),

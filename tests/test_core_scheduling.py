@@ -10,10 +10,11 @@ from repro.core.predictor import (
     predict_finish_time_fcfs,
 )
 from repro.core.request import Phase, Request, SLOSpec
-from repro.core.slack import ContinuousBatchingScheduler, SlackDecodeScheduler
-from repro.core.urgency import (
+from repro.policies import (
+    ContinuousBatchingScheduler,
     FCFSPrefillScheduler,
     SJFPrefillScheduler,
+    SlackDecodeScheduler,
     UrgencyPlusPrefillScheduler,
     UrgencyPrefillScheduler,
 )

@@ -12,8 +12,7 @@ from repro.core import jax_sched
 from repro.core.lut import StepTimeLUT
 from repro.core.predictor import predict_all_finish_times
 from repro.core.request import Phase, Request, SLOSpec
-from repro.core.slack import SlackDecodeScheduler
-from repro.core.urgency import UrgencyPrefillScheduler
+from repro.policies import SlackDecodeScheduler, UrgencyPrefillScheduler
 
 SLO = SLOSpec(ttft=8.0, tpot=0.05)
 

@@ -1,0 +1,180 @@
+"""ServeSession tests: streaming submit/step, admission control, token
+callbacks, input_len validation, virtual-clock determinism, and serve()'s
+reimplementation on top of the session."""
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.models import build_model
+from repro.serving.clock import ManualClock, MonotonicClock
+from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.session import ServeSession
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n=4, max_out=4, seed=0, arrival_gap=0.0):
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, int(rng.integers(4, 14)))))
+               for _ in range(n)]
+    return [
+        (
+            Request(rid=i, arrival=arrival_gap * i, input_len=len(p), output_len=max_out,
+                    slo=SLOSpec(ttft=120.0, tpot=10.0)),
+            p,
+        )
+        for i, p in enumerate(prompts)
+    ]
+
+
+def _server(tiny_model, clock=None, **ecfg_kw):
+    cfg, model, params = tiny_model
+    kw = dict(max_slots=4, max_len=64, chunk_size=16)
+    kw.update(ecfg_kw)
+    return DisaggServer(model, params, EngineConfig(**kw), clock=clock)
+
+
+def test_submit_rejects_input_len_mismatch(tiny_model):
+    server = _server(tiny_model)
+    session = ServeSession(server)
+    req = Request(rid=0, arrival=0.0, input_len=7, output_len=2)
+    with pytest.raises(ValueError, match="input_len=7"):
+        session.submit(req, [3, 4, 5])
+    # serve() validates too (it used to silently reassign input_len)
+    with pytest.raises(ValueError, match="input_len=7"):
+        server.serve([(req, [3, 4, 5])])
+
+
+def test_online_arrivals_with_admission_shedding(tiny_model):
+    """The acceptance scenario: an online-arrival burst through submit()/
+    step(), with at least one request shed and recorded in metrics."""
+    server = _server(tiny_model, clock=ManualClock(auto_step=1e-4))
+    session = ServeSession(server, max_queue_depth=2)
+    reqs = _requests(tiny_model[0], n=5, max_out=3)
+    accepted = [session.submit(req, prompt) for req, prompt in reqs]
+
+    assert accepted.count(False) >= 1  # burst exceeded the queue depth
+    while session.has_work:
+        session.step()
+
+    s = session.summary()
+    assert s["submitted"] == 5
+    assert s["rejected"] == accepted.count(False)
+    assert s["rejected_rids"] == [r.rid for (r, _), ok in zip(reqs, accepted) if not ok]
+    assert s["completed"] == s["accepted"]
+    for (r, _), ok in zip(reqs, accepted):
+        assert r.phase == (Phase.DONE if ok else Phase.FAILED)
+    # shed requests are visible in per-request metrics with null latencies
+    per = {d["rid"]: d for d in s["requests"]}
+    for (r, _), ok in zip(reqs, accepted):
+        if not ok:
+            assert per[r.rid]["phase"] == "failed"
+            assert per[r.rid]["ttft"] is None
+        else:
+            assert per[r.rid]["ttft"] is not None
+            assert per[r.rid]["mean_tpot"] is not None
+
+
+def test_on_token_callbacks_stream_every_token(tiny_model):
+    server = _server(tiny_model, clock=ManualClock(auto_step=1e-4))
+    per_req = []
+    session_wide = []
+    session = ServeSession(server, on_token=lambda r, tok, t: session_wide.append((r.rid, tok)))
+    reqs = _requests(tiny_model[0], n=3, max_out=3)
+    for req, prompt in reqs:
+        session.submit(req, prompt, on_token=lambda r, tok, t: per_req.append((r.rid, tok)))
+    done_rids = []
+    while session.has_work:
+        done_rids += session.step()
+
+    assert sorted(done_rids) == [r.rid for r, _ in reqs]
+    assert per_req == session_wide  # both hooks observe the same stream
+    # the streamed tokens, grouped by rid, reconstruct the outputs exactly
+    streamed = {}
+    for rid, tok in session_wide:
+        streamed.setdefault(rid, []).append(tok)
+    assert streamed == session.outputs
+    # token timestamps are monotone per request
+    for r, _ in reqs:
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+
+
+def test_serve_is_a_thin_loop_over_the_session(tiny_model):
+    """serve() (the legacy blocking API) must produce exactly the outputs of
+    a manual submit/step loop over ServeSession."""
+    reqs_a = _requests(tiny_model[0], n=3, max_out=4, seed=2)
+    reqs_b = copy.deepcopy(reqs_a)
+
+    server_a = _server(tiny_model, clock=ManualClock(auto_step=1e-4))
+    outs_a = server_a.serve(reqs_a)
+
+    server_b = _server(tiny_model, clock=ManualClock(auto_step=1e-4))
+    session = ServeSession(server_b)
+    for req, prompt in reqs_b:
+        session.submit(req, prompt)
+    while session.has_work:
+        session.step()
+
+    assert outs_a == session.outputs
+    for (ra, _), (rb, _) in zip(reqs_a, reqs_b):
+        assert ra.phase == rb.phase == Phase.DONE
+        assert ra.n_generated == rb.n_generated
+
+
+def test_manual_clock_makes_engine_runs_deterministic(tiny_model):
+    """With the injected ManualClock, two identical runs agree on every
+    timestamp bit-for-bit — the wall-clock flake the clock seam removes."""
+
+    def run_once():
+        reqs = _requests(tiny_model[0], n=3, max_out=4, seed=1, arrival_gap=0.01)
+        server = _server(tiny_model, clock=ManualClock(auto_step=2e-4))
+        outs = server.serve(reqs)
+        return outs, [(r.ttft(), r.mean_tpot(), tuple(r.token_times)) for r, _ in reqs]
+
+    outs1, t1 = run_once()
+    outs2, t2 = run_once()
+    assert outs1 == outs2
+    assert t1 == t2  # exact equality, not approx: virtual time is injected
+
+
+def test_default_clock_is_wall_clock(tiny_model):
+    server = _server(tiny_model)
+    assert isinstance(server.clock, MonotonicClock)
+
+
+def test_queue_depth_none_overrides_configured_depth(tiny_model):
+    """FROM_CONFIG (default) inherits the EngineConfig depth; an explicit
+    None always means unbounded, even over a depth-configured server."""
+    server = _server(
+        tiny_model, clock=ManualClock(auto_step=1e-4), admission_queue_depth=1
+    )
+    inherited = ServeSession(server)
+    assert inherited.max_queue_depth == 1
+    unbounded = ServeSession(server, max_queue_depth=None)
+    assert unbounded.max_queue_depth is None
+    reqs = _requests(tiny_model[0], n=3, max_out=2, seed=3)
+    assert all(unbounded.submit(req, prompt) for req, prompt in reqs)
+
+
+def test_serve_records_shedding_in_last_session(tiny_model):
+    """serve() over a depth-configured engine sheds; the session (and its
+    rejection metrics) stays reachable via server.last_session."""
+    server = _server(
+        tiny_model, clock=ManualClock(auto_step=1e-4), admission_queue_depth=1
+    )
+    reqs = _requests(tiny_model[0], n=4, max_out=2, seed=5)
+    outs = server.serve(reqs)
+    s = server.last_session.summary()
+    assert s["rejected"] >= 1
+    assert set(outs) == {r.rid for r, _ in reqs if r.phase == Phase.DONE}
+    assert s["rejected"] + s["completed"] == len(reqs)

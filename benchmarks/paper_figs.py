@@ -79,6 +79,64 @@ def fig6_decode_throughput() -> List[str]:
     return _rows("decode_tput_p50")
 
 
+@functools.lru_cache(maxsize=None)
+def _workload_grid() -> Dict:
+    """Beyond-paper scenario matrix: every built-in generated scenario ×
+    {kairos, distserve-style} on the simulator (the CI-light slice of what
+    `launch/evaluate.py` sweeps)."""
+    from repro.workloads.harness import HarnessConfig, run_grid
+
+    return run_grid(
+        scenarios=["paper-longtail", "bursty", "diurnal", "multi-tenant", "heavy-head"],
+        prefills=["kairos-urgency", "fcfs"],
+        decodes=["kairos-slack"],
+        backends=["sim"],
+        hcfg=HarnessConfig(n_requests=200, seed=SEED),
+    )
+
+
+def fig7_scenario_matrix() -> List[str]:
+    """Per-scenario e2e attainment + goodput, kairos vs FCFS prefill."""
+    rows = []
+    cells = {(c["scenario"], c["prefill"]): c for c in _workload_grid()["cells"]}
+    for sc in ("paper-longtail", "bursty", "diurnal", "multi-tenant", "heavy-head"):
+        k = cells[(sc, "kairos-urgency")]
+        f = cells[(sc, "fcfs")]
+        rows.append(
+            f"fig7_e2e@{sc},{k['attainment']['e2e']:.4f},fcfs:{f['attainment']['e2e']:.4f}"
+        )
+        rows.append(f"fig7_goodput@{sc},{k['goodput']:.1f},fcfs:{f['goodput']:.1f}")
+    mt = cells[("multi-tenant", "kairos-urgency")]
+    for tenant, att in sorted(mt["per_tenant"].items()):
+        rows.append(f"fig7_tenant_e2e@{tenant},{att['e2e']:.4f},")
+    return rows
+
+
+def workloads_bench_record() -> Dict:
+    """Perf record for BENCH_workloads.json: wall time + decode throughput
+    per cell of the scenario matrix."""
+    grid = _workload_grid()
+    return dict(
+        grid=grid["grid"],
+        n_requests=grid["config"]["n_requests"],
+        total_wall_s=sum(c["wall_time_s"] for c in grid["cells"]),
+        cells=[
+            dict(
+                scenario=c["scenario"],
+                prefill=c["prefill"],
+                decode=c["decode"],
+                backend=c["backend"],
+                wall_time_s=c["wall_time_s"],
+                decode_tput_p50=c["attainment"]["decode_tput_p50"],
+                decode_tput_mean=c["attainment"]["decode_tput_mean"],
+                goodput=c["goodput"],
+                e2e=c["attainment"]["e2e"],
+            )
+            for c in grid["cells"]
+        ],
+    )
+
+
 def headline_gains() -> List[str]:
     """Paper abstract numbers: max gains of Kairos over DistServe."""
     sw = _sweep()

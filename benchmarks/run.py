@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV. Usage:
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 
@@ -35,11 +37,19 @@ def main() -> None:
         paper_figs.fig4_ttft_attainment,
         paper_figs.fig5_tpot_attainment,
         paper_figs.fig6_decode_throughput,
+        paper_figs.fig7_scenario_matrix,
         paper_figs.headline_gains,
     ]:
         for row in fn():
             print(row)
         sys.stdout.flush()
+
+    # perf record: scenario-matrix wall time + decode throughput, one JSON
+    # file per run so the bench trajectory is diffable across PRs
+    record = paper_figs.workloads_bench_record()
+    bench_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_workloads.json"
+    bench_path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+    print(f"bench_workloads_wall_s,{record['total_wall_s']:.1f},{bench_path.name}")
 
     if not args.quick:
         from benchmarks.kernel_bench import kernel_rows, scheduler_rows

@@ -1,0 +1,54 @@
+"""Scenario-suite demo: sweep policies across workloads on sim + engine.
+
+    PYTHONPATH=src python examples/workload_eval.py [--n 120] [--engine]
+
+Prints one table per backend: e2e attainment / goodput / shed per scenario
+and prefill policy, with the multi-tenant scenario broken down per tenant.
+The engine backend (opt-in: it runs real JAX compute) applies a per-tenant
+admission quota so shedding is visible.
+"""
+import argparse
+
+from repro.workloads import HarnessConfig, available_scenarios, run_grid
+
+SCENARIOS = [s for s in available_scenarios() if s != "replay"]
+PREFILLS = ["kairos-urgency", "fcfs"]
+
+
+def print_grid(report: dict) -> None:
+    backend = report["grid"]["backends"][0]
+    print(f"\n--- backend: {backend} ---")
+    print(f"{'scenario':>15} {'prefill':>16} {'e2e':>6} {'goodput':>8} {'shed':>5}")
+    for c in report["cells"]:
+        att = c["attainment"]
+        print(
+            f"{c['scenario']:>15} {c['prefill']:>16} {att['e2e']:6.2f} "
+            f"{c['goodput']:8.1f} {c['shed']['total']:5d}"
+        )
+    mt = [c for c in report["cells"] if c["scenario"] == "multi-tenant"]
+    if mt:
+        print("  multi-tenant per-tenant e2e (first prefill policy):")
+        for tenant, att in sorted(mt[0]["per_tenant"].items()):
+            print(f"    {tenant:>12}: e2e={att['e2e']:.2f} n={att['n']} shed={att['n_shed']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=120)
+    ap.add_argument("--engine", action="store_true", help="also sweep the live engine")
+    args = ap.parse_args()
+
+    hcfg = HarnessConfig(n_requests=args.n, seed=1)
+    print_grid(run_grid(SCENARIOS, PREFILLS, ["kairos-slack"], ["sim"], hcfg))
+
+    if args.engine:
+        hcfg = HarnessConfig(
+            n_requests=min(args.n, 32), seed=1, tenant_quota=2, engine_arrival_scale=1e-3
+        )
+        print_grid(
+            run_grid(["multi-tenant"], PREFILLS, ["kairos-slack-greedy"], ["engine"], hcfg)
+        )
+
+
+if __name__ == "__main__":
+    main()

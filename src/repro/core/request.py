@@ -31,6 +31,11 @@ class Request:
     # sim: the true output length; engine: max new tokens
     output_len: int
     slo: SLOSpec = SLOSpec()
+    # multi-tenant serving: who submitted this and which SLO tier it bought.
+    # `slo` holds the resolved numeric targets; `slo_class` is the named tier
+    # (metrics group by it, admission quotas group by `tenant`).
+    tenant: str = "default"
+    slo_class: str = "standard"
 
     # --- dynamic state ---------------------------------------------------
     phase: Phase = Phase.QUEUED

@@ -1,0 +1,117 @@
+"""SLO-attainment evaluation CLI: scenario × policy × backend grids.
+
+    PYTHONPATH=src python -m repro.launch.evaluate \
+        --scenario multi-tenant --backend engine \
+        --prefill kairos-urgency --decode kairos-slack-greedy
+
+Every flag that names a scenario/policy/backend accepts several values and
+the harness sweeps the cartesian grid, emitting one JSON report (per-cell
+total and per-tenant/per-class attainment, goodput, shed counts) to stdout
+or ``--out``. ``--backend sim`` and ``--backend engine`` share the report
+schema; ``--list-scenarios`` / ``--list-policies`` print the registries.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.policies import available_policies
+from repro.workloads.harness import BACKENDS, HarnessConfig, run_grid
+from repro.workloads.scenarios import available_scenarios
+
+
+def build_parser() -> argparse.ArgumentParser:
+    pol = available_policies()
+    ap = argparse.ArgumentParser(
+        description="Evaluate registered scheduling policies across workload "
+        "scenarios on the simulator and/or the live engine."
+    )
+    ap.add_argument(
+        "--scenario", nargs="+", default=["paper-longtail"], choices=available_scenarios(),
+        help="workload scenario(s) from the repro.workloads registry",
+    )
+    ap.add_argument(
+        "--prefill", nargs="+", default=["kairos-urgency"], choices=pol["prefill"],
+        help="prefill policy name(s) from the repro.policies registry",
+    )
+    ap.add_argument(
+        "--decode", nargs="+", default=["kairos-slack"], choices=pol["decode"],
+        help="decode policy name(s) from the repro.policies registry",
+    )
+    ap.add_argument(
+        "--backend", nargs="+", default=["sim"], choices=BACKENDS,
+        help="serving substrate(s): discrete-event sim and/or live JAX engine",
+    )
+    ap.add_argument("--n", type=int, default=64, help="requests per scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--queue-depth", type=int, default=0,
+        help="engine global admission queue depth; 0 = unbounded",
+    )
+    ap.add_argument(
+        "--tenant-quota", type=int, default=0,
+        help="engine per-tenant queued-request quota; 0 = no quota",
+    )
+    ap.add_argument(
+        "--trace", default=None,
+        help='JSONL trace file for the "replay" scenario',
+    )
+    ap.add_argument(
+        "--arrival-scale", type=float, default=0.01,
+        help="engine backend: arrivals are multiplied by this (engine virtual "
+        "seconds per trace second; 0.01 compresses the trace 100x)",
+    )
+    ap.add_argument("--out", default=None, help="write the JSON report here (default stdout)")
+    ap.add_argument("--list-scenarios", action="store_true")
+    ap.add_argument("--list-policies", action="store_true")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+
+    if args.list_scenarios:
+        print("scenarios:", ", ".join(available_scenarios()))
+        return {}
+    if args.list_policies:
+        for side, names in available_policies().items():
+            print(f"{side}: {', '.join(names)}")
+        return {}
+
+    scenario_kwargs = {}
+    if "replay" in args.scenario:
+        if args.trace is None:
+            ap.error('the "replay" scenario requires --trace <file.jsonl>')
+        scenario_kwargs["replay"] = {"path": args.trace}
+
+    hcfg = HarnessConfig(
+        n_requests=args.n,
+        seed=args.seed,
+        queue_depth=args.queue_depth or None,
+        tenant_quota=args.tenant_quota or None,
+        engine_arrival_scale=args.arrival_scale,
+    )
+    report = run_grid(
+        scenarios=args.scenario,
+        prefills=args.prefill,
+        decodes=args.decode,
+        backends=args.backend,
+        hcfg=hcfg,
+        scenario_kwargs=scenario_kwargs,
+    )
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        ncells = len(report["cells"])
+        print(f"wrote {ncells} cells to {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return report
+
+
+if __name__ == "__main__":
+    main()

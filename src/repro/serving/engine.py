@@ -58,6 +58,9 @@ class EngineConfig:
     # ServeSession admission control: max requests waiting in the prefill
     # queue before submits are shed; None = unbounded (offline serve default)
     admission_queue_depth: Optional[int] = None
+    # per-tenant bound on queued requests, applied on top of the global
+    # bound (one tenant's burst can't monopolize admission); None = no quota
+    tenant_queue_depth: Optional[int] = None
 
 
 @dataclass

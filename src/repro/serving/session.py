@@ -8,13 +8,17 @@ exposes the three primitives an online frontend needs:
     step()                    advance prefill + admission + decode one round
     on_token callbacks        per-request and session-wide streaming hooks
 
-Admission control: ``max_queue_depth`` bounds the prefill queue. A submit
-that would exceed it is *shed* — the request is marked ``Phase.FAILED``,
-counted in the session metrics (``rejected`` / ``rejected_rids``), and
-``submit`` returns False. The default (``FROM_CONFIG``) inherits
-``EngineConfig.admission_queue_depth``; pass ``None`` for explicitly
-unbounded admission regardless of the config (the config's own default is
-unbounded, which preserves historical ``serve()`` behavior).
+Admission control: ``max_queue_depth`` bounds the prefill queue, and
+``tenant_queue_depth`` additionally bounds how many queued requests any one
+tenant may hold (so a single tenant's burst can't monopolize admission). A
+submit that would exceed either bound is *shed* — the request is marked
+``Phase.FAILED``, counted in the session metrics (``rejected`` /
+``rejected_rids``, plus the ``*_by_tenant`` breakdowns), and ``submit``
+returns False. The defaults (``FROM_CONFIG``) inherit
+``EngineConfig.admission_queue_depth`` / ``tenant_queue_depth``; pass
+``None`` for explicitly unbounded admission regardless of the config (the
+config's own defaults are unbounded, which preserves historical ``serve()``
+behavior).
 
 ``submit`` validates that ``request.input_len == len(prompt)`` and raises
 ``ValueError`` on mismatch: the declared length feeds the SLO/urgency
@@ -45,13 +49,20 @@ FROM_CONFIG: Any = object()
 
 @dataclass
 class SessionMetrics:
-    """Counters for one session's lifetime (shedding included)."""
+    """Counters for one session's lifetime (shedding included), with a
+    per-tenant breakdown so multi-tenant quota decisions stay auditable."""
 
     submitted: int = 0
     accepted: int = 0
     rejected: int = 0  # shed by admission control
     completed: int = 0
     rejected_rids: List[int] = field(default_factory=list)
+    submitted_by_tenant: Dict[str, int] = field(default_factory=dict)
+    rejected_by_tenant: Dict[str, int] = field(default_factory=dict)
+    completed_by_tenant: Dict[str, int] = field(default_factory=dict)
+
+    def _bump(self, table: Dict[str, int], tenant: str) -> None:
+        table[tenant] = table.get(tenant, 0) + 1
 
 
 class ServeSession:
@@ -68,12 +79,16 @@ class ServeSession:
         server: DisaggServer,
         max_queue_depth: Optional[int] = FROM_CONFIG,
         on_token: Optional[TokenCallback] = None,
+        tenant_queue_depth: Optional[int] = FROM_CONFIG,
     ):
         self.server = server
         self.ecfg = server.ecfg
         if max_queue_depth is FROM_CONFIG:
             max_queue_depth = server.ecfg.admission_queue_depth
         self.max_queue_depth = max_queue_depth  # None = unbounded
+        if tenant_queue_depth is FROM_CONFIG:
+            tenant_queue_depth = server.ecfg.tenant_queue_depth
+        self.tenant_queue_depth = tenant_queue_depth  # None = no per-tenant quota
         self.on_token = on_token
 
         self.queue: List[LiveRequest] = []  # waiting for / in chunked prefill
@@ -92,22 +107,30 @@ class ServeSession:
         on_token: Optional[TokenCallback] = None,
     ) -> bool:
         """Admit a request; returns False (and sheds it) when the prefill
-        queue is at ``max_queue_depth``. Raises ValueError if the declared
-        ``input_len`` does not match the prompt."""
+        queue is at ``max_queue_depth`` or the request's tenant already has
+        ``tenant_queue_depth`` requests queued. Raises ValueError if the
+        declared ``input_len`` does not match the prompt."""
         if request.input_len != len(prompt):
             raise ValueError(
                 f"request rid={request.rid} declares input_len={request.input_len} "
                 f"but prompt has {len(prompt)} tokens; the SLO/urgency arithmetic "
                 f"is computed from input_len, so they must agree"
             )
-        self.metrics.submitted += 1
+        m = self.metrics
+        m.submitted += 1
+        m._bump(m.submitted_by_tenant, request.tenant)
         self.requests.append(request)
-        if self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth:
+        shed = self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth
+        if not shed and self.tenant_queue_depth is not None:
+            queued = sum(1 for lr in self.queue if lr.req.tenant == request.tenant)
+            shed = queued >= self.tenant_queue_depth
+        if shed:
             request.phase = Phase.FAILED
-            self.metrics.rejected += 1
-            self.metrics.rejected_rids.append(request.rid)
+            m.rejected += 1
+            m.rejected_rids.append(request.rid)
+            m._bump(m.rejected_by_tenant, request.tenant)
             return False
-        self.metrics.accepted += 1
+        m.accepted += 1
         self.queue.append(LiveRequest(req=request, tokens=list(prompt)))
         if on_token is not None:
             self._callbacks[request.rid] = on_token
@@ -200,6 +223,7 @@ class ServeSession:
                     srv.decode.release(lr)
                     self.active.remove(lr)
                     self.metrics.completed += 1
+                    self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
                     completed.append(r.rid)
         return completed
 
@@ -235,6 +259,8 @@ class ServeSession:
         per = [
             dict(
                 rid=r.rid,
+                tenant=r.tenant,
+                slo_class=r.slo_class,
                 phase=r.phase.value,
                 ttft=r.ttft(),
                 mean_tpot=r.mean_tpot(),
@@ -249,5 +275,8 @@ class ServeSession:
             rejected=m.rejected,
             completed=m.completed,
             rejected_rids=list(m.rejected_rids),
+            submitted_by_tenant=dict(m.submitted_by_tenant),
+            rejected_by_tenant=dict(m.rejected_by_tenant),
+            completed_by_tenant=dict(m.completed_by_tenant),
             requests=per,
         )

@@ -1,8 +1,19 @@
-"""SLO-attainment and throughput metrics (paper §4.1 Metrics)."""
+"""SLO-attainment and throughput metrics (paper §4.1 Metrics).
+
+Attainment semantics: a request shed by admission control (``Phase.FAILED``)
+is an SLO *miss*, not a non-event — by default it counts in the denominator
+of every attainment fraction (and contributes nothing to the numerator).
+``attainment(done_only=True)`` restores the historical completed-only view
+for callers that explicitly want conditional attainment.
+
+Multi-tenant additions: ``attainment_by`` groups the same metrics per tenant
+or per SLO class, and ``goodput`` reports SLO-met generated tokens per
+second — the paper-style "useful throughput" a sweep should maximize.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -17,7 +28,8 @@ class Attainment:
     e2e: float  # both
     decode_tput_p50: float  # median per-request decode tokens/sec
     decode_tput_mean: float
-    n: int
+    n: int  # requests in the denominator (completed + shed unless done_only)
+    n_shed: int = 0  # Phase.FAILED requests counted as misses
 
     def as_dict(self) -> Dict[str, float]:
         return dict(
@@ -27,12 +39,16 @@ class Attainment:
             decode_tput_p50=self.decode_tput_p50,
             decode_tput_mean=self.decode_tput_mean,
             n=self.n,
+            n_shed=self.n_shed,
         )
 
 
-def attainment(requests: Sequence[Request]) -> Attainment:
+def attainment(requests: Sequence[Request], done_only: bool = False) -> Attainment:
+    """SLO attainment over the terminal requests (DONE, plus FAILED unless
+    ``done_only``). Shed requests met no SLO: they dilute every fraction."""
     done = [r for r in requests if r.phase == Phase.DONE]
-    n = len(done)
+    shed = [] if done_only else [r for r in requests if r.phase == Phase.FAILED]
+    n = len(done) + len(shed)
     if n == 0:
         return Attainment(0.0, 0.0, 0.0, 0.0, 0.0, 0)
     ttft = sum(r.meets_ttft() for r in done) / n
@@ -41,7 +57,36 @@ def attainment(requests: Sequence[Request]) -> Attainment:
     tputs = [t for t in (r.decode_tput() for r in done) if t is not None]
     p50 = float(np.percentile(tputs, 50)) if tputs else 0.0
     mean = float(np.mean(tputs)) if tputs else 0.0
-    return Attainment(ttft, tpot, e2e, p50, mean, n)
+    return Attainment(ttft, tpot, e2e, p50, mean, n, n_shed=len(shed))
+
+
+def attainment_by(
+    requests: Sequence[Request],
+    key: Union[str, Callable[[Request], str]] = "tenant",
+    done_only: bool = False,
+) -> Dict[str, Attainment]:
+    """Attainment broken down by a request attribute (``"tenant"``,
+    ``"slo_class"``) or an arbitrary key function."""
+    keyfn = (lambda r: getattr(r, key)) if isinstance(key, str) else key
+    groups: Dict[str, List[Request]] = {}
+    for r in requests:
+        groups.setdefault(keyfn(r), []).append(r)
+    return {k: attainment(groups[k], done_only=done_only) for k in sorted(groups)}
+
+
+def goodput(requests: Sequence[Request], span: Optional[float] = None) -> float:
+    """SLO-met tokens/sec: generated tokens of completed requests that met
+    their e2e SLO, over the trace span (first arrival -> last completion
+    unless ``span`` is given). Shed and SLO-missing requests contribute 0."""
+    good = [r for r in requests if r.phase == Phase.DONE and r.meets_e2e()]
+    if not good:
+        return 0.0
+    if span is None:
+        ends = [r.done_time for r in requests if r.done_time is not None]
+        span = max(ends) - min(r.arrival for r in requests)
+    if span <= 0:
+        return 0.0
+    return sum(r.n_generated for r in good) / span
 
 
 def summarize(result: SimResult) -> Dict[str, float]:
@@ -56,6 +101,7 @@ def summarize(result: SimResult) -> Dict[str, float]:
         ),
         prefill_busy=result.prefill_busy,
         decode_busy=result.decode_busy,
+        goodput=goodput(result.requests, span=result.makespan or None),
     )
     done = [r for r in result.requests if r.phase == Phase.DONE]
     if done:

@@ -1,0 +1,282 @@
+"""Evaluation harness: (scenario × prefill × decode × backend) grids.
+
+One report schema over two backends:
+
+    sim     `DisaggSimulator` via `run_policy` — paper-scale lengths and
+            SLOs, discrete-event time
+    engine  the live `DisaggServer` driven through `ServeSession.run` on a
+            deterministic `ManualClock` — real JAX compute at demo scale
+
+Scenario traces are paper-scale (prompts up to 128K tokens); the engine
+backend maps each request onto an engine-scale twin (prompt/output lengths
+rescaled into the engine's slot budget, arrivals compressed, tenant /
+SLO-class labels preserved) so per-tenant admission quotas, shedding, and
+the registry policies are exercised on real compute. Numbers from the two
+backends are therefore *not* comparable to each other — the grid is for
+attainment-vs-policy structure per backend, not cross-backend deltas.
+
+Every cell reports total and per-tenant / per-SLO-class attainment, goodput
+(SLO-met tokens/sec), and shed counts, all derived uniformly from terminal
+request phases (`repro.sim.metrics`). `launch/evaluate.py` is the CLI;
+`benchmarks/paper_figs.py` plots the emitted JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.request import Phase, Request, SLOSpec
+from repro.sim.metrics import attainment, attainment_by, goodput
+from repro.sim.simulator import SimConfig, run_policy
+from repro.workloads.scenarios import make_scenario
+
+BACKENDS: Tuple[str, ...] = ("sim", "engine")
+
+
+@dataclass(frozen=True)
+class HarnessConfig:
+    """Knobs shared by every cell of one grid run."""
+
+    n_requests: Optional[int] = None  # override the scenario's default size
+    seed: int = 0
+    sim: SimConfig = SimConfig()
+
+    # engine backend: model + how paper-scale traces map onto it
+    engine_arch: str = "llama3-8b-smoke"
+    engine_max_prompt: int = 24  # paper-scale inputs rescaled into [2, this]
+    engine_max_output: int = 6  # outputs rescaled into [1, this]
+    engine_arrival_scale: float = 0.01  # arrivals × this -> engine virtual seconds
+    # SLO targets must map into engine virtual time too, or attainment
+    # degenerates to the completion rate (every paper-scale target is
+    # trivially met under compressed arrivals). TTFT compresses with the
+    # arrivals (None = follow engine_arrival_scale, so changing one knob
+    # can't silently decouple them); TPOT tracks service time, which does
+    # NOT compress, so it gets its own factor.
+    engine_slo_ttft_scale: Optional[float] = None
+    engine_slo_tpot_scale: float = 0.05
+
+    @property
+    def slo_ttft_scale(self) -> float:
+        return (
+            self.engine_slo_ttft_scale
+            if self.engine_slo_ttft_scale is not None
+            else self.engine_arrival_scale
+        )
+    engine_chunk_size: int = 16
+    engine_max_slots: int = 8
+    engine_max_len: int = 64
+    queue_depth: Optional[int] = None  # global admission bound (engine)
+    tenant_quota: Optional[int] = None  # per-tenant queued bound (engine)
+
+    def as_dict(self) -> Dict:
+        # the report's run-identity block: every knob (asdict recurses into
+        # SimConfig), so two perf records with different settings never
+        # diff as if only the numbers moved
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class _EngineBundle:
+    """Lazily-built model shared by every engine cell of a grid."""
+
+    arch: str
+    cfg: object = None
+    model: object = None
+    params: object = None
+    built: bool = field(default=False)
+
+    def build(self):
+        if not self.built:
+            import jax
+
+            from repro.configs import get_config
+            from repro.models import build_model
+
+            self.cfg = get_config(self.arch).replace(dtype="float32")
+            self.model = build_model(self.cfg)
+            self.params = self.model.init(jax.random.key(0))
+            self.built = True
+        return self
+
+
+def to_engine_requests(
+    reqs: Sequence[Request], hcfg: HarnessConfig, vocab_size: int, rng: np.random.Generator
+) -> List[Tuple[Request, List[int]]]:
+    """Map paper-scale requests onto engine-scale (Request, prompt) twins.
+
+    Lengths are rescaled relative to the trace maximum (preserving relative
+    ordering, so long-tail structure survives), arrivals are compressed by
+    ``engine_arrival_scale``, tenant/SLO-class labels carry over unchanged,
+    and the numeric SLO targets are compressed into engine virtual time
+    (``engine_slo_ttft_scale`` / ``engine_slo_tpot_scale``) so relative
+    tier tightness — premium vs batch — survives and attainment stays
+    policy-sensitive rather than trivially 1.0.
+    """
+    if not reqs:
+        return []
+    max_in = max(r.input_len for r in reqs)
+    max_out = max(r.output_len for r in reqs)
+    pairs = []
+    for r in reqs:
+        n_in = 2 + round((hcfg.engine_max_prompt - 2) * r.input_len / max_in)
+        n_out = max(1, round(hcfg.engine_max_output * r.output_len / max_out))
+        prompt = list(map(int, rng.integers(2, vocab_size, n_in)))
+        pairs.append(
+            (
+                Request(
+                    rid=r.rid,
+                    arrival=r.arrival * hcfg.engine_arrival_scale,
+                    input_len=n_in,
+                    output_len=n_out,
+                    slo=SLOSpec(
+                        ttft=r.slo.ttft * hcfg.slo_ttft_scale,
+                        tpot=r.slo.tpot * hcfg.engine_slo_tpot_scale,
+                    ),
+                    tenant=r.tenant,
+                    slo_class=r.slo_class,
+                ),
+                prompt,
+            )
+        )
+    return pairs
+
+
+def _cell_report(reqs: Sequence[Request]) -> Dict:
+    """The backend-independent part of a cell: everything is derived from
+    terminal request phases, so sim and engine emit identical schemas."""
+    att = attainment(reqs).as_dict()
+    per_tenant = {k: v.as_dict() for k, v in attainment_by(reqs, "tenant").items()}
+    return dict(
+        n_requests=len(reqs),
+        n_completed=sum(r.phase == Phase.DONE for r in reqs),
+        attainment=att,
+        per_tenant=per_tenant,
+        per_class={k: v.as_dict() for k, v in attainment_by(reqs, "slo_class").items()},
+        goodput=goodput(reqs),
+        # shed counts are the same n_shed the attainment rows carry — one
+        # source of truth, surfaced where the CLI/CI consumers look for it
+        shed=dict(
+            total=att["n_shed"],
+            by_tenant={k: v["n_shed"] for k, v in per_tenant.items() if v["n_shed"]},
+        ),
+    )
+
+
+def _run_sim(reqs, prefill: str, decode: str, hcfg: HarnessConfig) -> List[Request]:
+    res = run_policy(reqs, prefill, decode, sim_cfg=hcfg.sim)
+    return res.requests
+
+
+def _run_engine(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+) -> List[Request]:
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer, EngineConfig
+    from repro.serving.session import ServeSession
+
+    bundle.build()
+    rng = np.random.default_rng(hcfg.seed)
+    pairs = to_engine_requests(reqs, hcfg, bundle.cfg.vocab_size, rng)
+    ecfg = EngineConfig(
+        max_slots=hcfg.engine_max_slots,
+        max_len=hcfg.engine_max_len,
+        chunk_size=hcfg.engine_chunk_size,
+        prefill_policy=prefill,
+        decode_policy=decode,
+        admission_queue_depth=hcfg.queue_depth,
+        tenant_queue_depth=hcfg.tenant_quota,
+    )
+    server = DisaggServer(
+        bundle.model, bundle.params, ecfg, clock=ManualClock(auto_step=1e-4)
+    )
+    session = ServeSession(server)
+    session.run(pairs)
+    return [r for r, _ in pairs]
+
+
+def evaluate_cell(
+    scenario: str,
+    prefill: str,
+    decode: str,
+    backend: str,
+    hcfg: HarnessConfig = HarnessConfig(),
+    scenario_kwargs: Optional[Dict] = None,
+    _bundle: Optional[_EngineBundle] = None,
+) -> Dict:
+    """Run one (scenario, prefill, decode, backend) cell and report it."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    kwargs = dict(scenario_kwargs or {})
+    if hcfg.n_requests is not None:
+        kwargs.setdefault("n_requests", hcfg.n_requests)
+    # regenerate per cell so every cell is self-contained whatever the
+    # backend does to the objects (the sim deepcopies and the engine builds
+    # twins today, but a cell must not depend on its neighbors' backends)
+    reqs = make_scenario(scenario, **kwargs).generate(hcfg.seed)
+    if backend == "sim":
+        bundle = None
+    else:
+        # build the model outside the timer; note the engine's jitted
+        # prefill/decode steps still compile on first use, so the first
+        # engine cell's wall_time_s carries that one-time cost
+        bundle = (_bundle or _EngineBundle(hcfg.engine_arch)).build()
+    t0 = time.perf_counter()
+    if backend == "sim":
+        terminal = _run_sim(reqs, prefill, decode, hcfg)
+    else:
+        terminal = _run_engine(reqs, prefill, decode, hcfg, bundle)
+    cell = dict(
+        scenario=scenario,
+        prefill=prefill,
+        decode=decode,
+        backend=backend,
+        wall_time_s=time.perf_counter() - t0,
+    )
+    cell.update(_cell_report(terminal))
+    return cell
+
+
+def run_grid(
+    scenarios: Sequence[str],
+    prefills: Sequence[str],
+    decodes: Sequence[str],
+    backends: Sequence[str] = ("sim",),
+    hcfg: HarnessConfig = HarnessConfig(),
+    scenario_kwargs: Optional[Dict[str, Dict]] = None,
+) -> Dict:
+    """Sweep the full cartesian grid; returns the single JSON-able report.
+
+    ``scenario_kwargs`` maps scenario name -> factory kwargs (e.g. the
+    ``replay`` scenario's ``path``).
+    """
+    bundle = _EngineBundle(hcfg.engine_arch)  # built lazily, shared by cells
+    cells = []
+    for backend in backends:
+        for scenario in scenarios:
+            for prefill in prefills:
+                for decode in decodes:
+                    cells.append(
+                        evaluate_cell(
+                            scenario,
+                            prefill,
+                            decode,
+                            backend,
+                            hcfg=hcfg,
+                            scenario_kwargs=(scenario_kwargs or {}).get(scenario),
+                            _bundle=bundle,
+                        )
+                    )
+    return dict(
+        grid=dict(
+            scenarios=list(scenarios),
+            prefills=list(prefills),
+            decodes=list(decodes),
+            backends=list(backends),
+        ),
+        config=hcfg.as_dict(),
+        cells=cells,
+    )

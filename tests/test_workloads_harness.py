@@ -1,0 +1,212 @@
+"""Evaluation harness: grid reports over both backends, engine-scale
+request mapping, per-tenant quota shedding through ServeSession, and the
+`launch/evaluate.py` CLI (the acceptance command, shrunk)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.request import Phase
+from repro.launch.evaluate import main as evaluate_main
+from repro.workloads import HarnessConfig, run_grid, to_engine_requests
+from repro.workloads.harness import _EngineBundle, evaluate_cell
+
+CELL_KEYS = {
+    "scenario", "prefill", "decode", "backend", "wall_time_s", "n_requests",
+    "n_completed", "attainment", "per_tenant", "per_class", "goodput", "shed",
+}
+
+
+@pytest.fixture(scope="module")
+def engine_bundle():
+    return _EngineBundle("llama3-8b-smoke").build()
+
+
+# ------------------------------------------------------------------- sim
+def test_sim_grid_runs_the_full_cartesian_product():
+    rep = run_grid(
+        ["paper-longtail", "heavy-head"],
+        ["kairos-urgency", "fcfs"],
+        ["kairos-slack"],
+        ["sim"],
+        HarnessConfig(n_requests=40, seed=1),
+    )
+    assert len(rep["cells"]) == 4
+    assert rep["grid"]["scenarios"] == ["paper-longtail", "heavy-head"]
+    for c in rep["cells"]:
+        assert set(c) == CELL_KEYS
+        assert c["n_requests"] == 40
+        assert c["n_completed"] == 40  # sim never sheds
+        assert c["shed"]["total"] == 0
+        assert 0.0 <= c["attainment"]["e2e"] <= 1.0
+        assert c["goodput"] >= 0.0
+
+
+def test_sim_multi_tenant_reports_per_tenant_and_per_class():
+    cell = evaluate_cell(
+        "multi-tenant", "kairos-urgency", "kairos-slack", "sim",
+        HarnessConfig(n_requests=60, seed=1),
+    )
+    assert set(cell["per_tenant"]) == {"interactive", "standard", "batch"}
+    assert set(cell["per_class"]) == {"premium", "standard", "batch"}
+    assert sum(v["n"] for v in cell["per_tenant"].values()) == 60
+    for att in cell["per_tenant"].values():
+        assert {"ttft", "tpot", "e2e", "n", "n_shed"} <= set(att)
+
+
+# ---------------------------------------------------------------- engine
+def test_engine_scale_mapping_preserves_labels_and_budget(engine_bundle):
+    from repro.workloads import generate_scenario
+
+    reqs = generate_scenario("multi-tenant", seed=3, n_requests=40)
+    hcfg = HarnessConfig(seed=3)
+    pairs = to_engine_requests(reqs, hcfg, engine_bundle.cfg.vocab_size,
+                               np.random.default_rng(0))
+    assert len(pairs) == len(reqs)
+    for orig, (twin, prompt) in zip(reqs, pairs):
+        assert twin.input_len == len(prompt)
+        assert 2 <= twin.input_len <= hcfg.engine_max_prompt
+        assert 1 <= twin.output_len <= hcfg.engine_max_output
+        assert (twin.tenant, twin.slo_class) == (orig.tenant, orig.slo_class)
+        # SLO targets compress into engine virtual time, preserving tier
+        # ratios; TTFT follows the arrival compression unless overridden
+        assert hcfg.slo_ttft_scale == hcfg.engine_arrival_scale
+        assert twin.slo.ttft == pytest.approx(orig.slo.ttft * hcfg.slo_ttft_scale)
+        assert twin.slo.tpot == pytest.approx(orig.slo.tpot * hcfg.engine_slo_tpot_scale)
+        assert twin.arrival == pytest.approx(orig.arrival * hcfg.engine_arrival_scale)
+    # relative length ordering survives the rescale
+    longest = max(reqs, key=lambda r: r.input_len)
+    assert pairs[longest.rid][0].input_len == hcfg.engine_max_prompt
+
+
+def test_engine_multi_tenant_quota_sheds_and_reports_per_tenant(engine_bundle):
+    """The tentpole loop: a multi-tenant burst on the live engine with a
+    per-tenant quota sheds through ServeSession and shows up per tenant."""
+    cell = evaluate_cell(
+        "multi-tenant", "kairos-urgency", "kairos-slack-greedy", "engine",
+        HarnessConfig(n_requests=16, seed=1, tenant_quota=1,
+                      engine_arrival_scale=1e-4),  # near-simultaneous burst
+        _bundle=engine_bundle,
+    )
+    assert cell["backend"] == "engine"
+    assert cell["shed"]["total"] > 0
+    assert cell["shed"]["by_tenant"]  # attributed to specific tenants
+    assert sum(cell["shed"]["by_tenant"].values()) == cell["shed"]["total"]
+    assert cell["n_completed"] + cell["shed"]["total"] == cell["n_requests"]
+    # shed requests count against their tenant's attainment denominator
+    for tenant, n_shed in cell["shed"]["by_tenant"].items():
+        assert cell["per_tenant"][tenant]["n_shed"] == n_shed
+
+
+def test_sim_and_engine_cells_share_one_schema(engine_bundle):
+    sim = evaluate_cell(
+        "multi-tenant", "kairos-urgency", "kairos-slack-greedy", "sim",
+        HarnessConfig(n_requests=12, seed=1),
+    )
+    eng = evaluate_cell(
+        "multi-tenant", "kairos-urgency", "kairos-slack-greedy", "engine",
+        HarnessConfig(n_requests=12, seed=1),
+        _bundle=engine_bundle,
+    )
+    assert set(sim) == set(eng) == CELL_KEYS
+    assert set(sim["attainment"]) == set(eng["attainment"])
+    assert set(sim["shed"]) == set(eng["shed"]) == {"total", "by_tenant"}
+    for tenant in sim["per_tenant"]:
+        assert set(sim["per_tenant"][tenant]) == set(eng["per_tenant"].get(tenant, sim["per_tenant"][tenant]))
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="backend"):
+        evaluate_cell("paper-longtail", "fcfs", "continuous", "gpu-cluster")
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_acceptance_command_emits_full_report(tmp_path):
+    """The ISSUE acceptance command (shrunk to 10 requests), engine backend."""
+    out = tmp_path / "report.json"
+    evaluate_main([
+        "--scenario", "multi-tenant", "--backend", "engine",
+        "--prefill", "kairos-urgency", "--decode", "kairos-slack-greedy",
+        "--n", "10", "--seed", "1", "--out", str(out),
+    ])
+    rep = json.loads(out.read_text())
+    [cell] = rep["cells"]
+    assert cell["backend"] == "engine"
+    for tenant_att in cell["per_tenant"].values():
+        for k in ("ttft", "tpot", "e2e", "n", "n_shed"):
+            assert k in tenant_att
+    assert "total" in cell["shed"] and "by_tenant" in cell["shed"]
+
+
+def test_cli_same_grid_on_sim_backend_matches_schema(tmp_path):
+    out_sim = tmp_path / "sim.json"
+    evaluate_main([
+        "--scenario", "multi-tenant", "--backend", "sim",
+        "--prefill", "kairos-urgency", "--decode", "kairos-slack-greedy",
+        "--n", "30", "--seed", "1", "--out", str(out_sim),
+    ])
+    rep = json.loads(out_sim.read_text())
+    [cell] = rep["cells"]
+    assert set(cell) == CELL_KEYS
+    assert set(cell["per_tenant"]) == {"interactive", "standard", "batch"}
+
+
+def test_cli_replay_scenario_round_trips_through_save_trace(tmp_path):
+    from repro.sim.trace import save_trace
+    from repro.workloads import generate_scenario
+
+    trace = tmp_path / "trace.jsonl"
+    save_trace(str(trace), generate_scenario("multi-tenant", seed=4, n_requests=12))
+    out = tmp_path / "replay.json"
+    evaluate_main([
+        "--scenario", "replay", "--trace", str(trace), "--backend", "sim",
+        "--prefill", "fcfs", "--decode", "continuous", "--out", str(out),
+    ])
+    rep = json.loads(out.read_text())
+    [cell] = rep["cells"]
+    assert cell["scenario"] == "replay"
+    assert cell["n_requests"] == 12
+    assert set(cell["per_tenant"]) == {"interactive", "standard", "batch"}
+
+
+def test_cli_requires_trace_for_replay(capsys):
+    with pytest.raises(SystemExit):
+        evaluate_main(["--scenario", "replay", "--backend", "sim"])
+    assert "--trace" in capsys.readouterr().err
+
+
+# ------------------------------------------------------------ session quota
+def test_session_tenant_quota_direct(engine_bundle):
+    """Per-tenant quota on ServeSession with ManualClock: tenant A's burst
+    is clipped at the quota while tenant B is untouched."""
+    from repro.core.request import Request, SLOSpec
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer, EngineConfig
+    from repro.serving.session import ServeSession
+
+    ecfg = EngineConfig(max_slots=4, max_len=64, chunk_size=16)
+    server = DisaggServer(engine_bundle.model, engine_bundle.params, ecfg,
+                          clock=ManualClock(auto_step=1e-4))
+    session = ServeSession(server, tenant_queue_depth=2)
+    rng = np.random.default_rng(0)
+
+    def req(rid, tenant):
+        prompt = list(map(int, rng.integers(2, engine_bundle.cfg.vocab_size, 6)))
+        return Request(rid=rid, arrival=0.0, input_len=6, output_len=2,
+                       slo=SLOSpec(ttft=120.0, tpot=10.0), tenant=tenant), prompt
+
+    results = [session.submit(*req(i, "a")) for i in range(4)]
+    results += [session.submit(*req(10, "b"))]
+    assert results == [True, True, False, False, True]  # quota hits tenant a only
+
+    m = session.metrics
+    assert m.submitted_by_tenant == {"a": 4, "b": 1}
+    assert m.rejected_by_tenant == {"a": 2}
+    while session.has_work:
+        session.step()
+    assert session.metrics.completed_by_tenant == {"a": 2, "b": 1}
+
+    s = session.summary()
+    assert s["rejected_by_tenant"] == {"a": 2}
+    shed = [d for d in s["requests"] if d["phase"] == Phase.FAILED.value]
+    assert {d["tenant"] for d in shed} == {"a"}

@@ -1,0 +1,241 @@
+"""Scenario registry: determinism per seed, trace validity for every
+registered name, tenant/SLO structure, arrival-process shape, trace
+save/load round-trip, and the shed-inclusive attainment semantics."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.request import Phase, Request, SLOSpec
+from repro.sim.metrics import attainment, attainment_by, goodput
+from repro.sim.trace import TraceConfig, generate_trace, load_trace, save_trace
+from repro.workloads import (
+    MarkovModulatedArrivals,
+    PoissonArrivals,
+    SinusoidalArrivals,
+    available_scenarios,
+    generate_scenario,
+    make_scenario,
+)
+
+
+@pytest.fixture(scope="module")
+def replay_path(tmp_path_factory):
+    p = tmp_path_factory.mktemp("traces") / "replay.jsonl"
+    save_trace(str(p), generate_scenario("multi-tenant", seed=5, n_requests=30))
+    return str(p)
+
+
+def _kwargs_for(name, replay_path):
+    if name == "replay":
+        return {"path": replay_path}
+    return {"n_requests": 60}
+
+
+def _fingerprint(reqs):
+    return [
+        (r.arrival, r.input_len, r.output_len, r.tenant, r.slo_class, r.slo.ttft, r.slo.tpot)
+        for r in reqs
+    ]
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_the_six_builtins():
+    names = available_scenarios()
+    for expected in ("paper-longtail", "bursty", "diurnal", "multi-tenant",
+                     "heavy-head", "replay"):
+        assert expected in names
+
+
+def test_every_registered_scenario_generates_a_valid_trace(replay_path):
+    for name in available_scenarios():
+        reqs = make_scenario(name, **_kwargs_for(name, replay_path)).generate(seed=0)
+        assert len(reqs) > 0, name
+        arrivals = [r.arrival for r in reqs]
+        assert all(b >= a for a, b in zip(arrivals, arrivals[1:])), name
+        for r in reqs:
+            assert isinstance(r, Request)
+            assert r.arrival >= 0.0
+            assert r.input_len > 0 and r.output_len > 0
+            assert r.slo.ttft > 0 and r.slo.tpot > 0
+            assert r.tenant and r.slo_class
+            assert r.phase == Phase.QUEUED
+
+
+def test_every_registered_scenario_is_deterministic_per_seed(replay_path):
+    """Property over the whole registry: same seed -> identical trace."""
+    for name in available_scenarios():
+        kw = _kwargs_for(name, replay_path)
+        a = make_scenario(name, **kw).generate(seed=7)
+        b = make_scenario(name, **kw).generate(seed=7)
+        assert _fingerprint(a) == _fingerprint(b), name
+        if name != "replay":  # a replay ignores the seed by design
+            c = make_scenario(name, **kw).generate(seed=8)
+            assert _fingerprint(a) != _fingerprint(c), name
+
+
+def test_unknown_scenario_raises_with_known_names():
+    with pytest.raises(ValueError, match="multi-tenant"):
+        make_scenario("nope")
+
+
+def test_replay_without_path_raises():
+    with pytest.raises(ValueError, match="path"):
+        make_scenario("replay")
+
+
+def test_paper_longtail_matches_generate_trace_bit_for_bit():
+    old = generate_trace(TraceConfig(n_requests=80, qps=3.0, seed=11))
+    new = generate_scenario("paper-longtail", seed=11, n_requests=80)
+    assert _fingerprint(old) == _fingerprint(new)
+
+
+# ------------------------------------------------------------- structure
+def test_multi_tenant_has_distinct_tenants_and_slo_classes():
+    reqs = generate_scenario("multi-tenant", seed=2, n_requests=300)
+    tenants = {r.tenant for r in reqs}
+    assert tenants == {"interactive", "standard", "batch"}
+    by_class = {r.tenant: r.slo_class for r in reqs}
+    assert by_class == {"interactive": "premium", "standard": "standard", "batch": "batch"}
+    # distinct SLO targets and length distributions per tenant
+    slos = {r.tenant: (r.slo.ttft, r.slo.tpot) for r in reqs}
+    assert len(set(slos.values())) == 3
+    mean_len = {
+        t: np.mean([r.input_len for r in reqs if r.tenant == t]) for t in tenants
+    }
+    assert mean_len["interactive"] < mean_len["standard"] < mean_len["batch"]
+
+
+def test_heavy_head_is_heavier_than_paper_longtail():
+    heavy = generate_scenario("heavy-head", seed=2, n_requests=400)
+    paper = generate_scenario("paper-longtail", seed=2, n_requests=400)
+    assert np.mean([r.input_len for r in heavy]) > np.mean([r.input_len for r in paper])
+
+
+def test_bursty_arrivals_are_burstier_than_poisson():
+    rng = np.random.default_rng(0)
+    mmpp = MarkovModulatedArrivals().times(2000, rng)
+    rng = np.random.default_rng(0)
+    pois = PoissonArrivals(qps=3.0).times(2000, rng)
+
+    def cv(ts):
+        gaps = np.diff(ts)
+        return np.std(gaps) / np.mean(gaps)
+
+    assert cv(mmpp) > 1.5 * cv(pois)  # on/off modulation inflates gap CV
+
+
+def test_diurnal_rate_oscillates():
+    arr = SinusoidalArrivals(qps_mean=3.0, amplitude=0.9, period=100.0)
+    ts = arr.times(3000, np.random.default_rng(1))
+    # count arrivals in peak vs trough quarters of each cycle
+    phase = (ts % 100.0) / 100.0
+    peak = np.sum((phase >= 0.0) & (phase < 0.5))  # sin > 0 half
+    trough = np.sum((phase >= 0.5) & (phase < 1.0))
+    assert peak > 2 * trough
+
+
+def test_arrival_process_validation():
+    with pytest.raises(ValueError):
+        PoissonArrivals(qps=0.0)
+    with pytest.raises(ValueError):
+        SinusoidalArrivals(amplitude=1.5)
+    with pytest.raises(ValueError):
+        MarkovModulatedArrivals(mean_on=-1.0)
+
+
+def test_scenario_validation_rejects_unknown_slo_class():
+    from repro.workloads import Scenario, TenantSpec
+
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        Scenario(name="bad", tenants=(TenantSpec("t", slo_class="gold"),))
+
+
+# ------------------------------------------------------- trace round trip
+def test_save_load_trace_round_trip_preserves_tenant_fields(tmp_path):
+    reqs = generate_scenario("multi-tenant", seed=9, n_requests=25)
+    p = tmp_path / "t.jsonl"
+    save_trace(str(p), reqs)
+    back = load_trace(str(p))
+    assert len(back) == len(reqs)
+    for a, b in zip(reqs, back):
+        assert (a.arrival, a.input_len, a.output_len) == (b.arrival, b.input_len, b.output_len)
+        assert (a.tenant, a.slo_class) == (b.tenant, b.slo_class)
+        assert (a.slo.ttft, a.slo.tpot) == (b.slo.ttft, b.slo.tpot)
+
+
+@pytest.mark.parametrize(
+    "line, match",
+    [
+        ("not json at all", "not valid JSON"),
+        ('["a", "list"]', "JSON object"),
+        ('{"arrival": 1.0, "output_len": 5}', "input_len"),
+        ('{"input_len": "many", "output_len": 5}', "integer"),
+        ('{"input_len": 12.9, "output_len": 5}', "integer"),  # would truncate
+        ('{"input_len": 0, "output_len": 5}', "positive"),
+        ('{"input_len": 4, "output_len": 2, "arrival": "noon"}', "number"),
+    ],
+)
+def test_load_trace_raises_clear_error_on_malformed_line(tmp_path, line, match):
+    p = tmp_path / "bad.jsonl"
+    good = json.dumps({"arrival": 0.0, "input_len": 4, "output_len": 2})
+    p.write_text(good + "\n" + line + "\n")
+    with pytest.raises(ValueError, match=match) as exc:
+        load_trace(str(p))
+    assert ":2:" in str(exc.value)  # names the offending line
+
+
+def test_replay_qps_rescale_applies_to_the_truncated_prefix(tmp_path):
+    """qps must hold for the requests actually replayed, not the whole file
+    (a bursty file front would otherwise skew the effective rate)."""
+    reqs = generate_scenario("bursty", seed=0, n_requests=200)
+    p = tmp_path / "bursty.jsonl"
+    save_trace(str(p), reqs)
+    replayed = make_scenario("replay", path=str(p), n_requests=50, qps=2.0).generate()
+    assert len(replayed) == 50
+    span = replayed[-1].arrival - replayed[0].arrival
+    assert len(replayed) / span == pytest.approx(2.0, rel=0.05)
+
+
+# ------------------------------------------------- attainment semantics
+def _done_req(rid, ttft_ok=True):
+    slo = SLOSpec(ttft=1.0, tpot=1.0)
+    r = Request(rid=rid, arrival=0.0, input_len=4, output_len=2, slo=slo)
+    r.phase = Phase.DONE
+    r.first_token_time = 0.5 if ttft_ok else 5.0
+    r.token_times = [r.first_token_time, r.first_token_time + 0.1]
+    r.n_generated = 2
+    r.done_time = r.token_times[-1]
+    return r
+
+
+def _shed_req(rid, tenant="default"):
+    r = Request(rid=rid, arrival=0.0, input_len=4, output_len=2, tenant=tenant)
+    r.phase = Phase.FAILED
+    return r
+
+
+def test_attainment_counts_shed_requests_as_misses():
+    reqs = [_done_req(0), _done_req(1), _shed_req(2), _shed_req(3)]
+    att = attainment(reqs)
+    assert att.n == 4 and att.n_shed == 2
+    assert att.ttft == att.e2e == 0.5  # 2 met of 4 terminal
+    old = attainment(reqs, done_only=True)
+    assert old.n == 2 and old.n_shed == 0
+    assert old.ttft == old.e2e == 1.0  # historical completed-only view
+
+
+def test_attainment_by_groups_per_tenant():
+    reqs = [_done_req(0), _shed_req(1, tenant="a"), _shed_req(2, tenant="a")]
+    by = attainment_by(reqs, "tenant")
+    assert set(by) == {"default", "a"}
+    assert by["a"].n == 2 and by["a"].e2e == 0.0 and by["a"].n_shed == 2
+    assert by["default"].e2e == 1.0
+
+
+def test_goodput_counts_only_slo_met_tokens():
+    ok, late = _done_req(0, ttft_ok=True), _done_req(1, ttft_ok=False)
+    # span = first arrival (0.0) -> last completion (5.1)
+    assert goodput([ok, late]) == pytest.approx(ok.n_generated / 5.1)
+    assert goodput([ok, late], span=1.0) == pytest.approx(float(ok.n_generated))
+    assert goodput([_shed_req(2)]) == 0.0

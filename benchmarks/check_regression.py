@@ -1,0 +1,125 @@
+"""Perf-regression gate over BENCH_workloads.json records.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_workloads.json --candidate bench-new.json \
+        --max-regress 0.25
+
+Compares decode throughput (p50 and mean) cell-by-cell between a committed
+baseline record and a freshly measured candidate (both produced by
+``benchmarks/run.py``). Cells are matched on their full identity
+(scenario, prefill, decode, backend); the gate FAILS (exit 1) when any
+matched cell's throughput drops by more than ``--max-regress`` (fraction,
+default 0.25) relative to the baseline.
+
+Only *throughput* is gated — wall_time_s is reported but never gated, since
+CI machine speed varies run to run while the simulator's virtual-time
+decode throughput is a seeded, deterministic quantity. Cells present on
+one side only are reported (the grid legitimately grows across PRs) but do
+not fail the gate; a candidate that matches ZERO baseline cells fails,
+because that means the gate is comparing nothing.
+
+``--refresh-check`` flips the tool into a second mode for the on-main
+refresh step: exit 0 when the two records are *materially* identical (same
+grid, same cells, identical deterministic metrics — wall times ignored, as
+they differ every run), exit 1 when the committed record is stale and worth
+re-committing. This keeps the refresh commit from firing on every push just
+because wall_time_s wiggled.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+GATED_METRICS = ("decode_tput_p50", "decode_tput_mean")
+# deterministic (seeded, virtual-time) cell metrics: these decide whether a
+# record refresh is warranted; wall times never do
+MATERIAL_METRICS = GATED_METRICS + ("goodput", "e2e")
+
+Key = Tuple[str, str, str, str]
+
+
+def _cells(record: Dict) -> Dict[Key, Dict]:
+    return {
+        (c["scenario"], c["prefill"], c["decode"], c.get("backend", "sim")): c
+        for c in record["cells"]
+    }
+
+
+def compare(baseline: Dict, candidate: Dict, max_regress: float) -> Tuple[bool, str]:
+    """Returns (ok, human-readable report)."""
+    base, cand = _cells(baseline), _cells(candidate)
+    matched = sorted(set(base) & set(cand))
+    lines = []
+    failures = 0
+    for key in matched:
+        for metric in GATED_METRICS:
+            b, c = base[key].get(metric), cand[key].get(metric)
+            if not b or c is None:  # zero/absent baseline: nothing to gate
+                continue
+            rel = (c - b) / b
+            mark = "ok"
+            if rel < -max_regress:
+                failures += 1
+                mark = f"REGRESSION (>{max_regress:.0%} drop)"
+            lines.append(
+                f"{'/'.join(key)} {metric}: {b:.2f} -> {c:.2f} ({rel:+.1%}) {mark}"
+            )
+    for key in sorted(set(base) - set(cand)):
+        lines.append(f"{'/'.join(key)}: only in baseline (not gated)")
+    for key in sorted(set(cand) - set(base)):
+        lines.append(f"{'/'.join(key)}: new cell (not gated)")
+    if not matched:
+        return False, "no cells in common between baseline and candidate\n" + "\n".join(lines)
+    verdict = f"{failures} regression(s) across {len(matched)} matched cells"
+    return failures == 0, "\n".join(lines + [verdict])
+
+
+def materially_equal(baseline: Dict, candidate: Dict) -> bool:
+    """True when the records agree on everything deterministic: grid shape,
+    request count, cell identities, and every MATERIAL_METRIC."""
+    if baseline.get("grid") != candidate.get("grid"):
+        return False
+    if baseline.get("n_requests") != candidate.get("n_requests"):
+        return False
+    base, cand = _cells(baseline), _cells(candidate)
+    if set(base) != set(cand):
+        return False
+    return all(
+        base[key].get(m) == cand[key].get(m)
+        for key in base
+        for m in MATERIAL_METRICS
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_workloads.json")
+    ap.add_argument("--candidate", required=True, help="freshly measured record")
+    ap.add_argument(
+        "--max-regress", type=float, default=0.25,
+        help="max allowed fractional throughput drop per cell (default 0.25)",
+    )
+    ap.add_argument(
+        "--refresh-check", action="store_true",
+        help="exit 0 iff the records are materially identical (wall times "
+        "ignored); used by CI to decide whether to re-commit the record",
+    )
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    if args.refresh_check:
+        same = materially_equal(baseline, candidate)
+        print("refresh-check:", "identical" if same else "stale")
+        return 0 if same else 1
+    ok, report = compare(baseline, candidate, args.max_regress)
+    print(report)
+    print("bench-gate:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,12 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--workloads-only]
+
+``--workloads-only`` runs just the workloads scenario matrix and writes the
+perf record (the slice CI's bench-gate compares against the committed
+``BENCH_workloads.json``); ``--bench-out`` redirects that record so a gate
+run never overwrites the baseline it is judging itself against.
 """
 from __future__ import annotations
 
@@ -15,10 +20,32 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip kernel microbenches")
+    ap.add_argument(
+        "--workloads-only", action="store_true",
+        help="only the workloads scenario matrix + its perf record",
+    )
+    ap.add_argument(
+        "--bench-out", default=None,
+        help="where to write the workloads perf record "
+        "(default: the repo's BENCH_workloads.json)",
+    )
     args = ap.parse_args()
 
     print("name,value,derived")
     t0 = time.perf_counter()
+
+    if args.workloads_only:
+        from benchmarks import paper_figs
+
+        record = paper_figs.workloads_bench_record()
+        bench_path = pathlib.Path(
+            args.bench_out
+            or pathlib.Path(__file__).resolve().parent.parent / "BENCH_workloads.json"
+        )
+        bench_path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
+        print(f"bench_workloads_wall_s,{record['total_wall_s']:.1f},{bench_path.name}")
+        print(f"total_bench_wall_s,{time.perf_counter()-t0:.1f},")
+        return
 
     # the policy surface under test, straight from the registry (the same
     # enumeration the simulator, engine, and CLI consume)
@@ -47,7 +74,10 @@ def main() -> None:
     # perf record: scenario-matrix wall time + decode throughput, one JSON
     # file per run so the bench trajectory is diffable across PRs
     record = paper_figs.workloads_bench_record()
-    bench_path = pathlib.Path(__file__).resolve().parent.parent / "BENCH_workloads.json"
+    bench_path = pathlib.Path(
+        args.bench_out
+        or pathlib.Path(__file__).resolve().parent.parent / "BENCH_workloads.json"
+    )
     bench_path.write_text(json.dumps(record, indent=2, sort_keys=True) + "\n")
     print(f"bench_workloads_wall_s,{record['total_wall_s']:.1f},{bench_path.name}")
 

@@ -20,7 +20,15 @@ class Phase(enum.Enum):
     TRANSFER = "transfer"  # KV moving prefill -> decode instance
     DECODE = "decode"  # active on the decode instance
     DONE = "done"
-    FAILED = "failed"
+    FAILED = "failed"  # shed by admission control (an SLO miss)
+    CANCELLED = "cancelled"  # client disconnected / withdrew the request
+
+
+# Terminal phases: the request will never produce another token. CANCELLED is
+# deliberately distinct from FAILED — a shed request is the *server's* SLO
+# miss, a cancelled one is the *client* walking away (metrics must not
+# conflate them; see sim/metrics.attainment).
+TERMINAL_PHASES = frozenset({Phase.DONE, Phase.FAILED, Phase.CANCELLED})
 
 
 @dataclass

@@ -6,9 +6,12 @@
 
 Every flag that names a scenario/policy/backend accepts several values and
 the harness sweeps the cartesian grid, emitting one JSON report (per-cell
-total and per-tenant/per-class attainment, goodput, shed counts) to stdout
-or ``--out``. ``--backend sim`` and ``--backend engine`` share the report
-schema; ``--list-scenarios`` / ``--list-policies`` print the registries.
+total and per-tenant/per-class attainment, goodput, shed/cancelled counts)
+to stdout or ``--out``. All three backends — ``sim``, ``engine``, and
+``async-engine`` (the `AsyncServeSession` frontend with concurrent stream
+consumers; see `repro.launch.loadgen` for the dedicated open-loop driver) —
+share the report schema; ``--list-scenarios`` / ``--list-policies`` print
+the registries.
 """
 from __future__ import annotations
 
@@ -59,6 +62,19 @@ def build_parser() -> argparse.ArgumentParser:
         help='JSONL trace file for the "replay" scenario',
     )
     ap.add_argument(
+        "--clients", type=int, default=4,
+        help="async-engine backend: concurrent stream-consumer tasks",
+    )
+    ap.add_argument(
+        "--stream-buffer", type=int, default=16,
+        help="async-engine backend: per-request token buffer size",
+    )
+    ap.add_argument(
+        "--backpressure", default="block", choices=("block", "shed"),
+        help="async-engine backend: slow-consumer policy (block the engine "
+        "or shed the laggard's request)",
+    )
+    ap.add_argument(
         "--arrival-scale", type=float, default=0.01,
         help="engine backend: arrivals are multiplied by this (engine virtual "
         "seconds per trace second; 0.01 compresses the trace 100x)",
@@ -93,6 +109,9 @@ def main(argv: Optional[List[str]] = None) -> dict:
         queue_depth=args.queue_depth or None,
         tenant_quota=args.tenant_quota or None,
         engine_arrival_scale=args.arrival_scale,
+        async_clients=args.clients,
+        stream_buffer=args.stream_buffer,
+        backpressure=args.backpressure,
     )
     report = run_grid(
         scenarios=args.scenario,

@@ -1,0 +1,195 @@
+"""Open-loop async load generator: live clients against the serving engine.
+
+    PYTHONPATH=src python -m repro.launch.loadgen \
+        --scenario bursty --clients 8 \
+        --prefill kairos-urgency --decode kairos-slack
+
+Replays any registered `repro.workloads` scenario against a live
+`DisaggServer` through the `AsyncServeSession` frontend: every request is
+submitted at its arrival time regardless of how the previous ones are doing
+(open loop — the load does not back off when the server struggles), and the
+resulting token streams are drained by ``--clients`` concurrent consumer
+tasks. This is the online counterpart of ``launch/evaluate.py``'s replayed
+backends, and it emits the *same* JSON report schema (one ``async-engine``
+cell inside the usual grid envelope), so the PR 3 analysis/plotting
+tooling consumes loadgen output unchanged. The cell carries one extra
+``loadgen`` block: per-client token counts, the backpressure policy, and
+whether the run used the wall clock.
+
+By default the run is driven on a deterministic `ManualClock` (virtual
+time, reproducible, fast); ``--realtime`` switches to the wall clock for a
+true online measurement where consumer latency and engine step time
+genuinely overlap.
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.policies import available_policies
+from repro.workloads.harness import HarnessConfig, _cell_report, _EngineBundle, _engine_setup
+from repro.workloads.scenarios import available_scenarios, make_scenario
+
+
+def run_loadgen(
+    scenario: str,
+    prefill: str,
+    decode: str,
+    hcfg: HarnessConfig,
+    realtime: bool = False,
+    scenario_kwargs: Optional[Dict] = None,
+) -> Dict:
+    """One open-loop async-engine cell, wrapped in the evaluate.py schema."""
+    from repro.serving.clock import MonotonicClock
+    from repro.serving.frontend import AsyncServeSession
+
+    kwargs = dict(scenario_kwargs or {})
+    if hcfg.n_requests is not None:
+        kwargs.setdefault("n_requests", hcfg.n_requests)
+    reqs = make_scenario(scenario, **kwargs).generate(hcfg.seed)
+    server, pairs = _engine_setup(
+        reqs, prefill, decode, hcfg, _EngineBundle(hcfg.engine_arch)
+    )
+    if realtime:
+        server.clock = MonotonicClock()
+    clients = max(1, hcfg.async_clients)
+
+    async def _serve() -> List[int]:
+        # the open-loop drive is AsyncServeSession.replay — the same code
+        # path as the harness's async-engine backend — with a hook for the
+        # per-client accounting this report adds
+        counts = [0] * clients
+        frontend = AsyncServeSession(
+            server,
+            stream_buffer=hcfg.stream_buffer,
+            backpressure=hcfg.backpressure,
+        )
+        async with frontend:
+            await frontend.replay(
+                pairs, clients=clients,
+                on_client_token=lambda c, _tok: counts.__setitem__(c, counts[c] + 1),
+            )
+        return counts
+
+    t0 = time.perf_counter()
+    tokens_by_client = asyncio.run(_serve())
+    wall = time.perf_counter() - t0
+
+    cell = dict(
+        scenario=scenario,
+        prefill=prefill,
+        decode=decode,
+        backend="async-engine",
+        wall_time_s=wall,
+    )
+    cell.update(_cell_report([r for r, _ in pairs]))
+    cell["loadgen"] = dict(
+        clients=clients,
+        realtime=realtime,
+        tokens_by_client=tokens_by_client,
+        backpressure=hcfg.backpressure,
+        stream_buffer=hcfg.stream_buffer,
+    )
+    return dict(
+        grid=dict(
+            scenarios=[scenario],
+            prefills=[prefill],
+            decodes=[decode],
+            backends=["async-engine"],
+        ),
+        config=hcfg.as_dict(),
+        cells=[cell],
+    )
+
+
+def build_parser() -> argparse.ArgumentParser:
+    pol = available_policies()
+    ap = argparse.ArgumentParser(
+        description="Open-loop async load generator over the live engine "
+        "(AsyncServeSession frontend)."
+    )
+    ap.add_argument(
+        "--scenario", default="paper-longtail", choices=available_scenarios(),
+        help="workload scenario from the repro.workloads registry",
+    )
+    ap.add_argument("--prefill", default="kairos-urgency", choices=pol["prefill"])
+    ap.add_argument("--decode", default="kairos-slack", choices=pol["decode"])
+    ap.add_argument("--clients", type=int, default=4, help="concurrent consumer tasks")
+    ap.add_argument("--n", type=int, default=64, help="requests in the scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--queue-depth", type=int, default=0,
+        help="global admission queue depth; 0 = unbounded",
+    )
+    ap.add_argument(
+        "--tenant-quota", type=int, default=0,
+        help="per-tenant queued-request quota; 0 = no quota",
+    )
+    ap.add_argument(
+        "--arrival-scale", type=float, default=0.01,
+        help="arrivals are multiplied by this (virtual seconds per trace second)",
+    )
+    ap.add_argument(
+        "--stream-buffer", type=int, default=16,
+        help="per-request token buffer before backpressure applies",
+    )
+    ap.add_argument(
+        "--backpressure", default="block", choices=("block", "shed"),
+        help="slow-consumer policy: stall the engine, or cancel the laggard",
+    )
+    ap.add_argument(
+        "--realtime", action="store_true",
+        help="drive the engine on the wall clock instead of virtual time",
+    )
+    ap.add_argument(
+        "--trace", default=None, help='JSONL trace file for the "replay" scenario'
+    )
+    ap.add_argument("--out", default=None, help="write the JSON report here (default stdout)")
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    scenario_kwargs = None
+    if args.scenario == "replay":
+        if args.trace is None:
+            ap.error('the "replay" scenario requires --trace <file.jsonl>')
+        scenario_kwargs = {"path": args.trace}
+
+    hcfg = HarnessConfig(
+        n_requests=args.n,
+        seed=args.seed,
+        queue_depth=args.queue_depth or None,
+        tenant_quota=args.tenant_quota or None,
+        engine_arrival_scale=args.arrival_scale,
+        async_clients=args.clients,
+        stream_buffer=args.stream_buffer,
+        backpressure=args.backpressure,
+    )
+    report = run_loadgen(
+        args.scenario, args.prefill, args.decode, hcfg,
+        realtime=args.realtime, scenario_kwargs=scenario_kwargs,
+    )
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        cell = report["cells"][0]
+        print(
+            f"loadgen: {cell['n_completed']}/{cell['n_requests']} completed, "
+            f"{sum(cell['loadgen']['tokens_by_client'])} tokens streamed by "
+            f"{cell['loadgen']['clients']} clients -> {args.out}",
+            file=sys.stderr,
+        )
+    else:
+        print(text)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,12 @@ exposes the three primitives an online frontend needs:
     submit(request, prompt)   admit (or shed) a request, at any time
     step()                    advance prefill + admission + decode one round
     on_token callbacks        per-request and session-wide streaming hooks
+    cancel(rid)               client disconnect: reclaim the request's
+                              queue entry / decode slot, Phase.CANCELLED
+
+(`repro.serving.frontend.AsyncServeSession` builds the online asyncio
+frontend — streaming handles, backpressure, open-loop replay — on exactly
+these primitives; see DESIGN.md §frontend.)
 
 Admission control: ``max_queue_depth`` bounds the prefill queue, and
 ``tenant_queue_depth`` additionally bounds how many queued requests any one
@@ -56,10 +62,16 @@ class SessionMetrics:
     accepted: int = 0
     rejected: int = 0  # shed by admission control
     completed: int = 0
+    cancelled: int = 0  # withdrawn by the client (disconnect / cancel())
+    # cancellations forced by the async frontend's backpressure policy when a
+    # slow consumer's buffer overflows ("shed" policy); a subset of `cancelled`
+    backpressure_shed: int = 0
     rejected_rids: List[int] = field(default_factory=list)
+    cancelled_rids: List[int] = field(default_factory=list)
     submitted_by_tenant: Dict[str, int] = field(default_factory=dict)
     rejected_by_tenant: Dict[str, int] = field(default_factory=dict)
     completed_by_tenant: Dict[str, int] = field(default_factory=dict)
+    cancelled_by_tenant: Dict[str, int] = field(default_factory=dict)
 
     def _bump(self, table: Dict[str, int], tenant: str) -> None:
         table[tenant] = table.get(tenant, 0) + 1
@@ -135,6 +147,34 @@ class ServeSession:
         if on_token is not None:
             self._callbacks[request.rid] = on_token
         return True
+
+    # -------------------------------------------------------------- cancel
+    def cancel(self, rid: int) -> bool:
+        """Withdraw an in-flight request (client disconnect).
+
+        Wherever the request currently lives — prefill queue, KV-transfer
+        wait, or an active decode slot — it is removed, its decode slot and
+        prefill cache are reclaimed immediately, and it terminates in
+        ``Phase.CANCELLED`` (NOT ``FAILED``: cancellation is the client
+        walking away, not an admission-control SLO miss, and the metrics
+        keep the two apart). Returns False if ``rid`` is not in flight
+        (already terminal, shed, or unknown) — cancelling twice is a no-op.
+        """
+        for lst in (self.queue, self.waiting_adm, self.active):
+            for lr in lst:
+                if lr.req.rid == rid:
+                    lst.remove(lr)
+                    self.server.decode.release(lr)
+                    lr.prefill_cache = None
+                    lr.req.phase = Phase.CANCELLED
+                    lr.req.done_time = self.server._now()
+                    self._callbacks.pop(rid, None)
+                    m = self.metrics
+                    m.cancelled += 1
+                    m.cancelled_rids.append(rid)
+                    m._bump(m.cancelled_by_tenant, lr.req.tenant)
+                    return True
+        return False
 
     # -------------------------------------------------------------- state
     @property
@@ -274,9 +314,13 @@ class ServeSession:
             accepted=m.accepted,
             rejected=m.rejected,
             completed=m.completed,
+            cancelled=m.cancelled,
+            backpressure_shed=m.backpressure_shed,
             rejected_rids=list(m.rejected_rids),
+            cancelled_rids=list(m.cancelled_rids),
             submitted_by_tenant=dict(m.submitted_by_tenant),
             rejected_by_tenant=dict(m.rejected_by_tenant),
             completed_by_tenant=dict(m.completed_by_tenant),
+            cancelled_by_tenant=dict(m.cancelled_by_tenant),
             requests=per,
         )

@@ -6,6 +6,14 @@ of every attainment fraction (and contributes nothing to the numerator).
 ``attainment(done_only=True)`` restores the historical completed-only view
 for callers that explicitly want conditional attainment.
 
+Client-cancelled requests (``Phase.CANCELLED``) are a third, distinct kind
+of terminal request: the *client* withdrew (disconnect, backpressure shed of
+a slow consumer), so the server neither met nor missed an SLO for them.
+They are excluded from every attainment fraction's numerator AND
+denominator, and surfaced separately as ``n_cancelled`` — conflating them
+with ``FAILED`` (as a pre-cancellation-aware caller might) would punish a
+policy for clients that walked away.
+
 Multi-tenant additions: ``attainment_by`` groups the same metrics per tenant
 or per SLO class, and ``goodput`` reports SLO-met generated tokens per
 second — the paper-style "useful throughput" a sweep should maximize.
@@ -30,6 +38,7 @@ class Attainment:
     decode_tput_mean: float
     n: int  # requests in the denominator (completed + shed unless done_only)
     n_shed: int = 0  # Phase.FAILED requests counted as misses
+    n_cancelled: int = 0  # Phase.CANCELLED: client withdrew; not in n
 
     def as_dict(self) -> Dict[str, float]:
         return dict(
@@ -40,24 +49,28 @@ class Attainment:
             decode_tput_mean=self.decode_tput_mean,
             n=self.n,
             n_shed=self.n_shed,
+            n_cancelled=self.n_cancelled,
         )
 
 
 def attainment(requests: Sequence[Request], done_only: bool = False) -> Attainment:
     """SLO attainment over the terminal requests (DONE, plus FAILED unless
-    ``done_only``). Shed requests met no SLO: they dilute every fraction."""
+    ``done_only``). Shed requests met no SLO: they dilute every fraction.
+    Cancelled requests are the client's doing — reported via ``n_cancelled``
+    but never in the fractions (see module docstring)."""
     done = [r for r in requests if r.phase == Phase.DONE]
     shed = [] if done_only else [r for r in requests if r.phase == Phase.FAILED]
+    n_cancelled = sum(r.phase == Phase.CANCELLED for r in requests)
     n = len(done) + len(shed)
     if n == 0:
-        return Attainment(0.0, 0.0, 0.0, 0.0, 0.0, 0)
+        return Attainment(0.0, 0.0, 0.0, 0.0, 0.0, 0, n_cancelled=n_cancelled)
     ttft = sum(r.meets_ttft() for r in done) / n
     tpot = sum(r.meets_tpot() for r in done) / n
     e2e = sum(r.meets_e2e() for r in done) / n
     tputs = [t for t in (r.decode_tput() for r in done) if t is not None]
     p50 = float(np.percentile(tputs, 50)) if tputs else 0.0
     mean = float(np.mean(tputs)) if tputs else 0.0
-    return Attainment(ttft, tpot, e2e, p50, mean, n, n_shed=len(shed))
+    return Attainment(ttft, tpot, e2e, p50, mean, n, n_shed=len(shed), n_cancelled=n_cancelled)
 
 
 def attainment_by(
@@ -82,7 +95,9 @@ def goodput(requests: Sequence[Request], span: Optional[float] = None) -> float:
     if not good:
         return 0.0
     if span is None:
-        ends = [r.done_time for r in requests if r.done_time is not None]
+        # completions only: a cancelled request's done_time records when the
+        # client bailed, which must not stretch the serving span
+        ends = [r.done_time for r in requests if r.phase == Phase.DONE]
         span = max(ends) - min(r.arrival for r in requests)
     if span <= 0:
         return 0.0

@@ -1,11 +1,21 @@
 """Evaluation harness: (scenario × prefill × decode × backend) grids.
 
-One report schema over two backends:
+One report schema over three backends:
 
-    sim     `DisaggSimulator` via `run_policy` — paper-scale lengths and
-            SLOs, discrete-event time
-    engine  the live `DisaggServer` driven through `ServeSession.run` on a
-            deterministic `ManualClock` — real JAX compute at demo scale
+    sim          `DisaggSimulator` via `run_policy` — paper-scale lengths
+                 and SLOs, discrete-event time
+    engine       the live `DisaggServer` driven through `ServeSession.run`
+                 on a deterministic `ManualClock` — real JAX compute at
+                 demo scale
+    async-engine the same server behind the `AsyncServeSession` frontend:
+                 requests are submitted open-loop at their arrival times on
+                 an asyncio event loop and their token streams drained by
+                 ``async_clients`` concurrent consumers — true concurrent
+                 admission/delivery rather than a replayed loop. On the
+                 shared `ManualClock` its per-request TTFT/TPOT match the
+                 `engine` backend bit-for-bit (the async/sync parity
+                 contract), so any divergence between those two columns is
+                 a frontend bug, not noise.
 
 Scenario traces are paper-scale (prompts up to 128K tokens); the engine
 backend maps each request onto an engine-scale twin (prompt/output lengths
@@ -34,7 +44,7 @@ from repro.sim.metrics import attainment, attainment_by, goodput
 from repro.sim.simulator import SimConfig, run_policy
 from repro.workloads.scenarios import make_scenario
 
-BACKENDS: Tuple[str, ...] = ("sim", "engine")
+BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine")
 
 
 @dataclass(frozen=True)
@@ -71,6 +81,12 @@ class HarnessConfig:
     engine_max_len: int = 64
     queue_depth: Optional[int] = None  # global admission bound (engine)
     tenant_quota: Optional[int] = None  # per-tenant queued bound (engine)
+    # async-engine backend: concurrent stream consumers, per-stream token
+    # buffer, and the slow-consumer policy ("block" stalls the engine,
+    # "shed" cancels the laggard — see repro.serving.frontend)
+    async_clients: int = 4
+    stream_buffer: int = 16
+    backpressure: str = "block"
 
     def as_dict(self) -> Dict:
         # the report's run-identity block: every knob (asdict recurses into
@@ -147,7 +163,7 @@ def to_engine_requests(
 
 def _cell_report(reqs: Sequence[Request]) -> Dict:
     """The backend-independent part of a cell: everything is derived from
-    terminal request phases, so sim and engine emit identical schemas."""
+    terminal request phases, so every backend emits an identical schema."""
     att = attainment(reqs).as_dict()
     per_tenant = {k: v.as_dict() for k, v in attainment_by(reqs, "tenant").items()}
     return dict(
@@ -163,6 +179,15 @@ def _cell_report(reqs: Sequence[Request]) -> Dict:
             total=att["n_shed"],
             by_tenant={k: v["n_shed"] for k, v in per_tenant.items() if v["n_shed"]},
         ),
+        # client-withdrawn requests (async frontend disconnect / slow-consumer
+        # shed); structurally parallel to `shed` but a different fate —
+        # cancelled ≠ shed ≠ failed (sim.metrics module docstring)
+        cancelled=dict(
+            total=att["n_cancelled"],
+            by_tenant={
+                k: v["n_cancelled"] for k, v in per_tenant.items() if v["n_cancelled"]
+            },
+        ),
     )
 
 
@@ -171,12 +196,12 @@ def _run_sim(reqs, prefill: str, decode: str, hcfg: HarnessConfig) -> List[Reque
     return res.requests
 
 
-def _run_engine(
-    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
-) -> List[Request]:
+def _engine_setup(reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle):
+    """Shared (engine | async-engine) setup: request twins + a fresh server
+    on a deterministic ManualClock. Identical construction is what makes
+    the two engine backends directly comparable."""
     from repro.serving.clock import ManualClock
     from repro.serving.engine import DisaggServer, EngineConfig
-    from repro.serving.session import ServeSession
 
     bundle.build()
     rng = np.random.default_rng(hcfg.seed)
@@ -193,8 +218,41 @@ def _run_engine(
     server = DisaggServer(
         bundle.model, bundle.params, ecfg, clock=ManualClock(auto_step=1e-4)
     )
+    return server, pairs
+
+
+def _run_engine(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+) -> List[Request]:
+    from repro.serving.session import ServeSession
+
+    server, pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
     session = ServeSession(server)
     session.run(pairs)
+    return [r for r, _ in pairs]
+
+
+def _run_async_engine(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+) -> List[Request]:
+    """The live-concurrency cell: open-loop submission through the
+    `AsyncServeSession` frontend, streams drained by concurrent clients."""
+    import asyncio
+
+    from repro.serving.frontend import AsyncServeSession
+
+    server, pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
+
+    async def _serve() -> None:
+        frontend = AsyncServeSession(
+            server,
+            stream_buffer=hcfg.stream_buffer,
+            backpressure=hcfg.backpressure,
+        )
+        async with frontend:
+            await frontend.replay(pairs, clients=hcfg.async_clients)
+
+    asyncio.run(_serve())
     return [r for r, _ in pairs]
 
 
@@ -227,8 +285,10 @@ def evaluate_cell(
     t0 = time.perf_counter()
     if backend == "sim":
         terminal = _run_sim(reqs, prefill, decode, hcfg)
-    else:
+    elif backend == "engine":
         terminal = _run_engine(reqs, prefill, decode, hcfg, bundle)
+    else:
+        terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle)
     cell = dict(
         scenario=scenario,
         prefill=prefill,

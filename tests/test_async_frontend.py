@@ -1,0 +1,437 @@
+"""AsyncServeSession tests: async/sync parity on a ManualClock, streaming
+order + TTFT timestamps, backpressure (block and shed), mid-stream client
+cancellation with slot/queue reclamation, admission shedding through the
+async path, and the cancelled-vs-shed metrics contract.
+
+The tests drive the event loop with ``asyncio.run`` from plain sync test
+functions, so they need no pytest-asyncio plugin at runtime (the ``[test]``
+extra still ships it for CI environments that want native async tests).
+"""
+import asyncio
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.models import build_model
+from repro.serving.clock import ManualClock
+from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.frontend import AsyncServeSession
+from repro.serving.session import ServeSession
+from repro.sim.metrics import attainment
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _requests(cfg, n=4, max_out=4, seed=0, arrival_gap=0.0):
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, int(rng.integers(4, 14)))))
+               for _ in range(n)]
+    return [
+        (
+            Request(rid=i, arrival=arrival_gap * i, input_len=len(p), output_len=max_out,
+                    slo=SLOSpec(ttft=120.0, tpot=10.0)),
+            p,
+        )
+        for i, p in enumerate(prompts)
+    ]
+
+
+def _server(tiny_model, clock=None, **ecfg_kw):
+    cfg, model, params = tiny_model
+    kw = dict(max_slots=4, max_len=64, chunk_size=16)
+    kw.update(ecfg_kw)
+    return DisaggServer(
+        model, params, EngineConfig(**kw),
+        clock=clock if clock is not None else ManualClock(auto_step=1e-4),
+    )
+
+
+# --------------------------------------------------------------- parity
+def test_async_sync_parity_on_manual_clock(tiny_model):
+    """The acceptance criterion: on the same trace and ManualClock, the
+    async frontend reproduces ServeSession.run()'s outputs AND per-request
+    TTFT/TPOT/token timestamps bit-for-bit."""
+    reqs_sync = _requests(tiny_model[0], n=5, max_out=4, seed=2, arrival_gap=0.01)
+    reqs_async = copy.deepcopy(reqs_sync)
+
+    server_a = _server(tiny_model)
+    outs_sync = server_a.serve(reqs_sync)
+
+    server_b = _server(tiny_model)
+
+    async def run_async():
+        frontend = AsyncServeSession(server_b)
+        async with frontend:
+            return await frontend.replay(reqs_async, clients=3)
+
+    outs_async = asyncio.run(run_async())
+
+    assert outs_sync == outs_async
+    for (rs, _), (ra, _) in zip(reqs_sync, reqs_async):
+        assert rs.phase == ra.phase == Phase.DONE
+        # exact equality, not approx: both sides read the same virtual clock
+        # in the same order, so any drift is a frontend scheduling bug
+        assert rs.ttft() == ra.ttft()
+        assert rs.mean_tpot() == ra.mean_tpot()
+        assert rs.token_times == ra.token_times
+
+
+def test_streaming_token_order_and_ttft_timestamps(tiny_model):
+    """Tokens arrive through handle.stream() in generation order, and the
+    first streamed token's timestamp is the request's TTFT anchor."""
+    server = _server(tiny_model)
+    pairs = _requests(tiny_model[0], n=3, max_out=3, seed=1)
+
+    async def run():
+        streamed = {}
+
+        async def consume(h):
+            async for tok in h.stream():
+                streamed.setdefault(h.rid, []).append(tok)
+
+        frontend = AsyncServeSession(server)
+        async with frontend:
+            handles = [await frontend.submit(r, p) for r, p in pairs]
+            assert all([await h.admitted() for h in handles])
+            await asyncio.gather(*(consume(h) for h in handles))
+        return streamed, frontend
+
+    streamed, frontend = asyncio.run(run())
+    assert streamed == frontend.session.outputs  # order and content both
+    for r, _ in pairs:
+        assert r.phase == Phase.DONE
+        assert r.first_token_time == r.token_times[0]
+        assert r.ttft() == r.first_token_time - r.arrival
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+
+
+# --------------------------------------------------------- backpressure
+def test_backpressure_shed_cancels_slow_consumer(tiny_model):
+    """A consumer that never drains its 1-token buffer gets shed: the
+    request is cancelled, counted in backpressure_shed, and its decode slot
+    is reclaimed."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=5, seed=3)
+
+    async def run():
+        frontend = AsyncServeSession(server, stream_buffer=1, backpressure="shed")
+        async with frontend:
+            handle = await frontend.submit(req, prompt)
+            assert await handle.admitted()
+            # no one consumes: the second token overflows the buffer
+        return frontend, handle
+
+    frontend, handle = asyncio.run(run())
+    assert req.phase == Phase.CANCELLED
+    assert handle.cancel_reason == "backpressure"
+    m = frontend.metrics
+    assert m.backpressure_shed == 1
+    assert m.cancelled == 1 and m.cancelled_rids == [req.rid]
+    assert m.rejected == 0  # shed-by-backpressure is NOT admission shedding
+    # engine resources reclaimed
+    assert frontend.session.active == [] and frontend.session.queue == []
+    assert server.decode.alloc.live_tokens == {}
+
+
+def test_backpressure_block_delivers_everything(tiny_model):
+    """With the "block" policy and a tiny buffer, a slow-but-alive consumer
+    stalls the engine instead of losing tokens: every token is delivered."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=5, seed=4)
+
+    async def run():
+        got = []
+        frontend = AsyncServeSession(server, stream_buffer=1, backpressure="block")
+        async with frontend:
+            handle = await frontend.submit(req, prompt)
+
+            async def slow_consume():
+                async for tok in handle.stream():
+                    await asyncio.sleep(0)  # yield repeatedly: consumer lags
+                    await asyncio.sleep(0)
+                    got.append(tok)
+
+            await slow_consume()
+        return got, frontend
+
+    got, frontend = asyncio.run(run())
+    assert req.phase == Phase.DONE
+    assert got == frontend.session.outputs[req.rid]
+    assert frontend.metrics.backpressure_shed == 0
+    assert frontend.metrics.cancelled == 0
+
+
+def test_shed_policy_never_drops_a_completed_requests_tokens(tiny_model):
+    """A request whose final token lands while its buffer is full is DONE,
+    not a laggard: the shed policy must deliver into the reserved slots
+    rather than cancel it (the reviewer-found final-token edge)."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=2, seed=7)
+
+    async def run():
+        frontend = AsyncServeSession(server, stream_buffer=1, backpressure="shed")
+        async with frontend:
+            handle = await frontend.submit(req, prompt)
+            assert await handle.admitted()
+            # consume nothing until the request has fully finished
+        got = []
+        async for tok in handle.stream():
+            got.append(tok)
+        return frontend, got
+
+    frontend, got = asyncio.run(run())
+    assert req.phase == Phase.DONE  # output_len=2 fits buffer+reserve
+    assert got == frontend.session.outputs[req.rid] and len(got) == 2
+    assert frontend.metrics.backpressure_shed == 0
+    assert frontend.metrics.cancelled == 0
+
+
+# --------------------------------------------------------- cancellation
+def test_midstream_cancel_reclaims_slot_and_queue(tiny_model):
+    """Breaking out of handle.stream() mid-generation == client disconnect:
+    the request terminates CANCELLED, its slot/queue entry is reclaimed, and
+    the other stream runs to completion undisturbed."""
+    server = _server(tiny_model)
+    pairs = _requests(tiny_model[0], n=2, max_out=6, seed=5)
+    (r0, p0), (r1, p1) = pairs
+
+    async def run():
+        frontend = AsyncServeSession(server)
+        async with frontend:
+            h0 = await frontend.submit(r0, p0)
+            h1 = await frontend.submit(r1, p1)
+
+            async def disconnect_after_first(h):
+                async for _ in h.stream():
+                    break  # client walks away mid-stream
+
+            async def drain(h):
+                async for _ in h.stream():
+                    pass
+
+            await asyncio.gather(disconnect_after_first(h0), drain(h1))
+        return frontend
+
+    frontend = asyncio.run(run())
+    assert r0.phase == Phase.CANCELLED
+    assert r1.phase == Phase.DONE
+    assert r0.n_generated >= 1  # it really was mid-stream
+    assert len(frontend.session.outputs[r1.rid]) == r1.n_generated
+    # reclamation: nothing left in any stage, no leaked decode slot
+    assert frontend.session.queue == []
+    assert frontend.session.waiting_adm == []
+    assert frontend.session.active == []
+    assert server.decode.alloc.live_tokens == {}
+    s = frontend.summary()
+    assert s["cancelled"] == 1 and s["cancelled_rids"] == [r0.rid]
+    assert s["completed"] == 1
+    per = {d["rid"]: d for d in s["requests"]}
+    assert per[r0.rid]["phase"] == "cancelled"
+
+
+def test_pre_admission_cancel_is_recorded_not_lost(tiny_model):
+    """Cancelling before the scheduled arrival (client gave up while the
+    request was still queued for submission) must still terminate the
+    request in CANCELLED and count in the metrics — not leave it QUEUED
+    and invisible to every report."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=2, seed=8)
+
+    async def run():
+        frontend = AsyncServeSession(server)
+        async with frontend:
+            handle = await frontend.submit(req, prompt, at=1e9)  # far future
+            handle.cancel()
+            assert (await handle.admitted()) is False
+            out = [tok async for tok in handle.stream()]
+        return frontend, handle, out
+
+    frontend, handle, out = asyncio.run(run())
+    assert out == []
+    assert req.phase == Phase.CANCELLED
+    assert handle.cancel_reason == "client"
+    m = frontend.metrics
+    assert m.cancelled == 1 and m.cancelled_rids == [req.rid]
+    # submitted-but-neither-accepted-nor-rejected: the counters add up and
+    # summary() carries a per-request row like any other terminal fate
+    assert m.submitted == 1 and m.accepted == 0 and m.rejected == 0
+    s = frontend.summary()
+    per = {d["rid"]: d for d in s["requests"]}
+    assert per[req.rid]["phase"] == "cancelled"
+    handle.cancel()  # idempotent: terminal phase short-circuits
+
+
+def test_aclose_resolves_unprocessed_submits(tiny_model):
+    """aclose() on exception must resolve handles whose submit intents the
+    stepper never ingested, or their awaiters would hang forever."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=2, seed=9)
+
+    async def run():
+        frontend = AsyncServeSession(server)
+        handle = None
+        try:
+            async with frontend:
+                handle = await frontend.submit(req, prompt)
+                raise RuntimeError("client blew up before the stepper ran")
+        except RuntimeError:
+            pass
+        # must resolve promptly instead of deadlocking
+        verdict = await asyncio.wait_for(handle.admitted(), timeout=5)
+        out = [tok async for tok in handle.stream()]
+        return verdict, out
+
+    verdict, out = asyncio.run(run())
+    assert verdict is False and out == []
+    assert req.phase == Phase.CANCELLED
+
+
+def test_async_admission_shed_is_failed_not_cancelled(tiny_model):
+    """Admission control still sheds through the async path — and a shed
+    request is FAILED (server's miss), never CANCELLED (client's exit)."""
+    server = _server(tiny_model)
+    pairs = _requests(tiny_model[0], n=4, max_out=2, seed=6)
+
+    async def run():
+        frontend = AsyncServeSession(server, max_queue_depth=1)
+        async with frontend:
+            handles = [await frontend.submit(r, p) for r, p in pairs]
+            verdicts = [await h.admitted() for h in handles]
+            outs = await asyncio.gather(*(h.result() for h in handles))
+        return frontend, verdicts, outs
+
+    frontend, verdicts, outs = asyncio.run(run())
+    assert verdicts.count(False) >= 1
+    for (r, _), ok, out in zip(pairs, verdicts, outs):
+        if ok:
+            assert r.phase == Phase.DONE and out == frontend.session.outputs[r.rid]
+        else:
+            assert r.phase == Phase.FAILED and out == []
+    m = frontend.metrics
+    assert m.rejected == verdicts.count(False)
+    assert m.cancelled == 0 and m.backpressure_shed == 0
+
+
+def test_stepper_crash_surfaces_instead_of_hanging(tiny_model):
+    """An engine exception mid-run must unblock consumers (EOS) and
+    re-raise out of drain()/async-with — never deadlock the frontend."""
+    server = _server(tiny_model)
+    (req, prompt), = _requests(tiny_model[0], n=1, max_out=4, seed=10)
+
+    def boom(*a, **kw):
+        raise RuntimeError("engine exploded")
+
+    async def run():
+        frontend = AsyncServeSession(server)
+        frontend.session.step = boom  # the next step() call blows up
+        handle = None
+        with pytest.raises(RuntimeError, match="engine exploded"):
+            async with frontend:
+                handle = await frontend.submit(req, prompt)
+                # consuming must terminate (EOS on crash), not hang
+                return [tok async for tok in handle.stream()], handle
+        return [], handle
+
+    out, handle = asyncio.run(asyncio.wait_for(run(), timeout=30))
+    assert out == []
+    assert handle.cancel_reason in ("client", "error")
+
+
+def test_restart_after_drain(tiny_model):
+    """start() after a completed drain() serves a second batch — the drain
+    state must not leak into the new stepper."""
+    server = _server(tiny_model)
+    pairs = _requests(tiny_model[0], n=2, max_out=2, seed=11)
+
+    async def run():
+        frontend = AsyncServeSession(server)
+        frontend.start()
+        h0 = await frontend.submit(*pairs[0])
+        out0 = await h0.result()
+        await frontend.drain()
+
+        frontend.start()
+        h1 = await frontend.submit(*pairs[1])
+        out1 = await asyncio.wait_for(h1.result(), timeout=30)
+        await frontend.drain()
+        return out0, out1
+
+    out0, out1 = asyncio.run(run())
+    assert out0 and out1
+    assert all(r.phase == Phase.DONE for r, _ in pairs)
+
+
+# --------------------------------------------------------------- metrics
+def test_attainment_keeps_cancelled_out_of_the_denominator():
+    """cancelled ≠ shed ≠ failed: CANCELLED requests are reported via
+    n_cancelled but neither help nor hurt any attainment fraction."""
+    def req(rid, phase):
+        r = Request(rid=rid, arrival=0.0, input_len=4, output_len=2,
+                    slo=SLOSpec(ttft=100.0, tpot=100.0))
+        r.phase = phase
+        if phase == Phase.DONE:
+            r.first_token_time = 1.0
+            r.token_times = [1.0, 1.5]
+            r.n_generated = 2
+            r.done_time = 1.5
+        return r
+
+    reqs = [req(0, Phase.DONE), req(1, Phase.FAILED), req(2, Phase.CANCELLED)]
+    att = attainment(reqs)
+    assert att.n == 2  # DONE + shed; the cancellation is not an SLO event
+    assert att.n_shed == 1
+    assert att.n_cancelled == 1
+    assert att.ttft == 0.5  # one hit over {DONE, FAILED}, unchanged by rid 2
+    done_only = attainment(reqs, done_only=True)
+    assert done_only.n == 1 and done_only.ttft == 1.0
+    assert done_only.n_cancelled == 1  # still visible, still not counted
+
+
+# --------------------------------------------------------------- harness
+def test_harness_async_engine_backend_matches_engine_backend():
+    """The grid's async-engine cell is the engine cell served online: same
+    twins, same ManualClock, so the attainment block must agree exactly."""
+    from repro.workloads.harness import HarnessConfig, evaluate_cell
+
+    hcfg = HarnessConfig(n_requests=10)
+    kw = dict(hcfg=hcfg)
+    sync_cell = evaluate_cell("multi-tenant", "kairos-urgency", "kairos-slack",
+                              "engine", **kw)
+    async_cell = evaluate_cell("multi-tenant", "kairos-urgency", "kairos-slack",
+                               "async-engine", **kw)
+    assert async_cell["backend"] == "async-engine"
+    assert sync_cell["attainment"] == async_cell["attainment"]
+    assert sync_cell["per_tenant"] == async_cell["per_tenant"]
+    assert sync_cell["goodput"] == async_cell["goodput"]
+    assert async_cell["cancelled"]["total"] == 0
+
+
+def test_loadgen_cli_emits_evaluate_schema(tmp_path):
+    from repro.launch import loadgen
+
+    out = tmp_path / "loadgen-report.json"
+    report = loadgen.main([
+        "--scenario", "multi-tenant", "--n", "10", "--clients", "3",
+        "--out", str(out),
+    ])
+    assert out.exists()
+    cell, = report["cells"]
+    # the evaluate.py cell schema, plus the loadgen block
+    for key in ("attainment", "per_tenant", "per_class", "goodput", "shed", "cancelled"):
+        assert key in cell
+    assert cell["backend"] == "async-engine"
+    lg = cell["loadgen"]
+    assert lg["clients"] == 3 and len(lg["tokens_by_client"]) == 3
+    # every completed request streamed at least one token to some client
+    assert sum(lg["tokens_by_client"]) >= cell["n_completed"] >= 1
+    assert lg["backpressure"] == "block" and lg["realtime"] is False

@@ -1,0 +1,60 @@
+"""CI bench-gate unit tests: the regression comparator and the
+refresh-check staleness predicate over BENCH_workloads.json-shaped records
+(no benchmarks are actually run — records are synthesized)."""
+import copy
+
+from benchmarks.check_regression import compare, materially_equal
+
+
+def _record(tput=20.0, scenarios=("a", "b")):
+    return dict(
+        grid=dict(scenarios=list(scenarios), prefills=["p"], decodes=["d"],
+                  backends=["sim"]),
+        n_requests=10,
+        total_wall_s=1.0,
+        cells=[
+            dict(scenario=s, prefill="p", decode="d", backend="sim",
+                 wall_time_s=0.5, decode_tput_p50=tput, decode_tput_mean=tput + 5,
+                 goodput=100.0, e2e=0.5)
+            for s in scenarios
+        ],
+    )
+
+
+def test_identical_records_pass_the_gate():
+    rec = _record()
+    ok, report = compare(rec, rec, max_regress=0.25)
+    assert ok and "0 regression(s)" in report
+
+
+def test_drop_beyond_threshold_fails_only_past_the_threshold():
+    base = _record(tput=20.0)
+    ok, _ = compare(base, _record(tput=16.0), max_regress=0.25)  # -20%: fine
+    assert ok
+    ok, report = compare(base, _record(tput=10.0), max_regress=0.25)  # -50%
+    assert not ok and "REGRESSION" in report
+
+
+def test_improvements_and_new_cells_never_fail():
+    base = _record(tput=20.0)
+    grown = _record(tput=40.0, scenarios=("a", "b", "c"))  # faster + new cell
+    ok, report = compare(base, grown, max_regress=0.25)
+    assert ok and "new cell" in report
+
+
+def test_zero_overlap_fails_the_gate():
+    ok, _ = compare(_record(scenarios=("a",)), _record(scenarios=("z",)), 0.25)
+    assert not ok
+
+
+def test_refresh_check_ignores_wall_time_but_not_metrics():
+    rec = _record()
+    wall_only = copy.deepcopy(rec)
+    wall_only["cells"][0]["wall_time_s"] = 99.0
+    wall_only["total_wall_s"] = 123.0
+    assert materially_equal(rec, wall_only)  # no bot commit for timer noise
+    moved = copy.deepcopy(rec)
+    moved["cells"][0]["decode_tput_p50"] *= 1.01
+    assert not materially_equal(rec, moved)
+    regrown = _record(scenarios=("a", "b", "c"))
+    assert not materially_equal(rec, regrown)  # grid change => refresh

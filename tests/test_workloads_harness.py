@@ -14,6 +14,7 @@ from repro.workloads.harness import _EngineBundle, evaluate_cell
 CELL_KEYS = {
     "scenario", "prefill", "decode", "backend", "wall_time_s", "n_requests",
     "n_completed", "attainment", "per_tenant", "per_class", "goodput", "shed",
+    "cancelled",
 }
 
 

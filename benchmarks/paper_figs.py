@@ -112,28 +112,64 @@ def fig7_scenario_matrix() -> List[str]:
     return rows
 
 
+@functools.lru_cache(maxsize=None)
+def _router_grid() -> Dict:
+    """Routed-fleet slice of the record: 2 replicas behind least-queued on
+    the prefix-heavy scenario (live engine compute, so it is sized well
+    below the sim matrix — the point is tracking routed decode throughput
+    and the prefix hit rate under the bench gate, not paper-scale load)."""
+    from repro.workloads.harness import HarnessConfig, run_grid
+
+    return run_grid(
+        scenarios=["prefix-heavy"],
+        prefills=["kairos-urgency"],
+        decodes=["kairos-slack"],
+        backends=["router"],
+        hcfg=HarnessConfig(
+            n_requests=24, seed=SEED, router_replicas=2, router_policy="least-queued"
+        ),
+    )
+
+
+def _record_cell(c: Dict) -> Dict:
+    row = dict(
+        scenario=c["scenario"],
+        prefill=c["prefill"],
+        decode=c["decode"],
+        backend=c["backend"],
+        wall_time_s=c["wall_time_s"],
+        decode_tput_p50=c["attainment"]["decode_tput_p50"],
+        decode_tput_mean=c["attainment"]["decode_tput_mean"],
+        goodput=c["goodput"],
+        e2e=c["attainment"]["e2e"],
+    )
+    if "router" in c:
+        row["router_policy"] = c["router"]["policy"]
+        row["router_replicas"] = c["router"]["replicas"]
+        row["prefix_hit_rate"] = c["router"]["prefix"]["hit_rate"]
+    return row
+
+
 def workloads_bench_record() -> Dict:
     """Perf record for BENCH_workloads.json: wall time + decode throughput
-    per cell of the scenario matrix."""
+    per cell of the scenario matrix, plus the routed-fleet cells (matched
+    by the gate on scenario/prefill/decode/backend like any other)."""
     grid = _workload_grid()
+    router = _router_grid()
+    cells = list(grid["cells"]) + list(router["cells"])
+    g = dict(grid["grid"])
+    g["backends"] = list(g["backends"]) + list(router["grid"]["backends"])
+    g["router"] = dict(
+        scenarios=router["grid"]["scenarios"],
+        policy=router["config"]["router_policy"],
+        replicas=router["config"]["router_replicas"],
+        n_requests=router["config"]["n_requests"],
+    )
     return dict(
-        grid=grid["grid"],
+        grid=g,
         n_requests=grid["config"]["n_requests"],
-        total_wall_s=sum(c["wall_time_s"] for c in grid["cells"]),
-        cells=[
-            dict(
-                scenario=c["scenario"],
-                prefill=c["prefill"],
-                decode=c["decode"],
-                backend=c["backend"],
-                wall_time_s=c["wall_time_s"],
-                decode_tput_p50=c["attainment"]["decode_tput_p50"],
-                decode_tput_mean=c["attainment"]["decode_tput_mean"],
-                goodput=c["goodput"],
-                e2e=c["attainment"]["e2e"],
-            )
-            for c in grid["cells"]
-        ],
+        total_wall_s=sum(c["wall_time_s"] for c in cells),
+        cells=[_record_cell(c) for c in cells],
     )
 
 

@@ -44,11 +44,21 @@ class Request:
     # (metrics group by it, admission quotas group by `tenant`).
     tenant: str = "default"
     slo_class: str = "standard"
+    # prefix sharing: requests carrying the same non-empty `prefix_group`
+    # begin with one shared prompt template covering `prefix_frac` of
+    # input_len (the "shared system prompt" shape prefix-aware routing
+    # exploits); the sim ignores both, the engine harness materializes them
+    prefix_group: str = ""
+    prefix_frac: float = 0.0
 
     # --- dynamic state ---------------------------------------------------
     phase: Phase = Phase.QUEUED
     prefilled_tokens: int = 0  # chunked-prefill progress
     prefix_cached_tokens: int = 0  # prefix-cache hits reduce remaining work
+    # tokens matched in the session's PrefixCache at admission — pure KV
+    # budget/metrics accounting, unlike prefix_cached_tokens it never skips
+    # compute (token outputs stay invariant to the cache)
+    prefix_hit_tokens: int = 0
     prefill_finish: Optional[float] = None
     first_token_time: Optional[float] = None  # == prefill_finish in PD disagg
     decode_start: Optional[float] = None  # admission to the decode instance

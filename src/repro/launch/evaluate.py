@@ -7,9 +7,11 @@
 Every flag that names a scenario/policy/backend accepts several values and
 the harness sweeps the cartesian grid, emitting one JSON report (per-cell
 total and per-tenant/per-class attainment, goodput, shed/cancelled counts)
-to stdout or ``--out``. All three backends — ``sim``, ``engine``, and
+to stdout or ``--out``. All four backends — ``sim``, ``engine``,
 ``async-engine`` (the `AsyncServeSession` frontend with concurrent stream
-consumers; see `repro.launch.loadgen` for the dedicated open-loop driver) —
+consumers; see `repro.launch.loadgen` for the dedicated open-loop driver),
+and ``router`` (``--replicas`` frontends behind a `RouterSession`, placement
+by ``--router``, per-replica breakdown in the cell's ``router`` block) —
 share the report schema; ``--list-scenarios`` / ``--list-policies`` print
 the registries.
 """
@@ -20,7 +22,7 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.policies import available_policies
+from repro.policies import available_policies, available_router_policies
 from repro.workloads.harness import BACKENDS, HarnessConfig, run_grid
 from repro.workloads.scenarios import available_scenarios
 
@@ -79,6 +81,14 @@ def build_parser() -> argparse.ArgumentParser:
         help="engine backend: arrivals are multiplied by this (engine virtual "
         "seconds per trace second; 0.01 compresses the trace 100x)",
     )
+    ap.add_argument(
+        "--replicas", type=int, default=2,
+        help="router backend: AsyncServeSession replica count",
+    )
+    ap.add_argument(
+        "--router", default="least-queued", choices=available_router_policies(),
+        help="router backend: routing policy from the repro.policies registry",
+    )
     ap.add_argument("--out", default=None, help="write the JSON report here (default stdout)")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--list-policies", action="store_true")
@@ -112,6 +122,8 @@ def main(argv: Optional[List[str]] = None) -> dict:
         async_clients=args.clients,
         stream_buffer=args.stream_buffer,
         backpressure=args.backpressure,
+        router_replicas=args.replicas,
+        router_policy=args.router,
     )
     report = run_grid(
         scenarios=args.scenario,

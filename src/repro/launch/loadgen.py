@@ -20,18 +20,31 @@ By default the run is driven on a deterministic `ManualClock` (virtual
 time, reproducible, fast); ``--realtime`` switches to the wall clock for a
 true online measurement where consumer latency and engine step time
 genuinely overlap.
+
+``--servers N --router <policy>`` serves through a `RouterSession` fleet
+instead of a single frontend: N replica engines, placement by a registered
+routing policy (round-robin / least-queued / slack-aware / prefix-affinity),
+and a ``router`` block in the cell with per-replica request counts and
+prefix-cache hit rates.
 """
 from __future__ import annotations
 
 import argparse
 import asyncio
+import dataclasses
 import json
 import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.policies import available_policies
-from repro.workloads.harness import HarnessConfig, _cell_report, _EngineBundle, _engine_setup
+from repro.policies import available_policies, available_router_policies
+from repro.workloads.harness import (
+    HarnessConfig,
+    _cell_report,
+    _EngineBundle,
+    _engine_setup,
+    router_cell_block,
+)
 from repro.workloads.scenarios import available_scenarios, make_scenario
 
 
@@ -42,48 +55,72 @@ def run_loadgen(
     hcfg: HarnessConfig,
     realtime: bool = False,
     scenario_kwargs: Optional[Dict] = None,
+    servers: int = 1,
+    router: Optional[str] = None,
 ) -> Dict:
-    """One open-loop async-engine cell, wrapped in the evaluate.py schema."""
+    """One open-loop cell wrapped in the evaluate.py schema: a single
+    ``async-engine`` frontend by default, or — with ``servers > 1`` or an
+    explicit ``router`` policy — a routed fleet (`RouterSession`) whose
+    cell adds the per-replica ``router`` block."""
     from repro.serving.clock import MonotonicClock
     from repro.serving.frontend import AsyncServeSession
+    from repro.serving.router import RouterSession
 
+    routed = servers > 1 or router is not None
+    if routed:
+        hcfg = dataclasses.replace(
+            hcfg,
+            router_replicas=max(1, servers),
+            router_policy=router or hcfg.router_policy,
+        )
     kwargs = dict(scenario_kwargs or {})
     if hcfg.n_requests is not None:
         kwargs.setdefault("n_requests", hcfg.n_requests)
     reqs = make_scenario(scenario, **kwargs).generate(hcfg.seed)
-    server, pairs = _engine_setup(
-        reqs, prefill, decode, hcfg, _EngineBundle(hcfg.engine_arch)
+    fleet, pairs = _engine_setup(
+        reqs, prefill, decode, hcfg, _EngineBundle(hcfg.engine_arch),
+        n_servers=hcfg.router_replicas if routed else 1,
     )
     if realtime:
-        server.clock = MonotonicClock()
+        for srv in fleet:
+            srv.clock = MonotonicClock()
     clients = max(1, hcfg.async_clients)
 
-    async def _serve() -> List[int]:
-        # the open-loop drive is AsyncServeSession.replay — the same code
-        # path as the harness's async-engine backend — with a hook for the
-        # per-client accounting this report adds
+    async def _serve():
+        # the open-loop drive is (Async|Router)Session.replay — the same
+        # code paths as the harness's async-engine/router backends — with a
+        # hook for the per-client accounting this report adds
         counts = [0] * clients
-        frontend = AsyncServeSession(
-            server,
-            stream_buffer=hcfg.stream_buffer,
-            backpressure=hcfg.backpressure,
-        )
-        async with frontend:
-            await frontend.replay(
-                pairs, clients=clients,
-                on_client_token=lambda c, _tok: counts.__setitem__(c, counts[c] + 1),
+        on_tok = lambda c, _tok: counts.__setitem__(c, counts[c] + 1)
+        if routed:
+            session = RouterSession(
+                fleet,
+                policy=hcfg.router_policy,
+                stream_buffer=hcfg.stream_buffer,
+                backpressure=hcfg.backpressure,
+                prefix_block=hcfg.prefix_block,
+                prefix_cache_blocks=hcfg.prefix_cache_blocks,
             )
-        return counts
+        else:
+            session = AsyncServeSession(
+                fleet[0],
+                stream_buffer=hcfg.stream_buffer,
+                backpressure=hcfg.backpressure,
+            )
+        async with session:
+            await session.replay(pairs, clients=clients, on_client_token=on_tok)
+        return counts, session
 
     t0 = time.perf_counter()
-    tokens_by_client = asyncio.run(_serve())
+    tokens_by_client, session = asyncio.run(_serve())
     wall = time.perf_counter() - t0
 
+    backend = "router" if routed else "async-engine"
     cell = dict(
         scenario=scenario,
         prefill=prefill,
         decode=decode,
-        backend="async-engine",
+        backend=backend,
         wall_time_s=wall,
     )
     cell.update(_cell_report([r for r, _ in pairs]))
@@ -94,12 +131,14 @@ def run_loadgen(
         backpressure=hcfg.backpressure,
         stream_buffer=hcfg.stream_buffer,
     )
+    if routed:
+        cell["router"] = router_cell_block(session.summary())
     return dict(
         grid=dict(
             scenarios=[scenario],
             prefills=[prefill],
             decodes=[decode],
-            backends=["async-engine"],
+            backends=[backend],
         ),
         config=hcfg.as_dict(),
         cells=[cell],
@@ -118,6 +157,14 @@ def build_parser() -> argparse.ArgumentParser:
     )
     ap.add_argument("--prefill", default="kairos-urgency", choices=pol["prefill"])
     ap.add_argument("--decode", default="kairos-slack", choices=pol["decode"])
+    ap.add_argument(
+        "--servers", type=int, default=1,
+        help="replica count: >1 serves through a RouterSession fleet",
+    )
+    ap.add_argument(
+        "--router", default=None, choices=available_router_policies(),
+        help="routing policy (implies the routed path even with --servers 1)",
+    )
     ap.add_argument("--clients", type=int, default=4, help="concurrent consumer tasks")
     ap.add_argument("--n", type=int, default=64, help="requests in the scenario")
     ap.add_argument("--seed", type=int, default=0)
@@ -174,6 +221,7 @@ def main(argv: Optional[List[str]] = None) -> dict:
     report = run_loadgen(
         args.scenario, args.prefill, args.decode, hcfg,
         realtime=args.realtime, scenario_kwargs=scenario_kwargs,
+        servers=args.servers, router=args.router,
     )
     text = json.dumps(report, indent=2, sort_keys=True)
     if args.out:

@@ -6,11 +6,14 @@ Importing this package registers every built-in policy. Public surface:
     PolicySpec           name + kwargs, the unit both backends consume
     PrefillPolicy        protocol: select(queue, t_now, mu, budget)
     DecodePolicy         protocol: select(active, t_now) / observe(batch, t)
+    RouterPolicy         protocol: select(replicas, request, prompt) -> idx
     register_prefill     class decorator, @register_prefill("my-policy")
     register_decode      class decorator (ctor takes the StepTimeLUT first)
+    register_router      class decorator, @register_router("my-router")
     make_prefill         spec|name -> PrefillPolicy
     make_decode          spec|name, lut -> DecodePolicy
-    available_policies   {"prefill": names, "decode": names}
+    make_router          spec|name -> RouterPolicy
+    available_policies   {"prefill": names, "decode": names, "router": names}
 """
 from repro.policies.decode import (
     ContinuousBatchingScheduler,
@@ -28,14 +31,24 @@ from repro.policies.registry import (
     Partition,
     PolicySpec,
     PrefillPolicy,
+    RouterPolicy,
     Selection,
     available_decode_policies,
     available_policies,
     available_prefill_policies,
+    available_router_policies,
     make_decode,
     make_prefill,
+    make_router,
     register_decode,
     register_prefill,
+    register_router,
+)
+from repro.policies.router import (
+    LeastQueuedRouter,
+    PrefixAffinityRouter,
+    RoundRobinRouter,
+    SlackAwareRouter,
 )
 
 __all__ = [
@@ -46,16 +59,24 @@ __all__ = [
     "SJFPrefillScheduler",
     "UrgencyPlusPrefillScheduler",
     "UrgencyPrefillScheduler",
+    "LeastQueuedRouter",
+    "PrefixAffinityRouter",
+    "RoundRobinRouter",
+    "SlackAwareRouter",
     "DecodePolicy",
     "Partition",
     "PolicySpec",
     "PrefillPolicy",
+    "RouterPolicy",
     "Selection",
     "available_decode_policies",
     "available_policies",
     "available_prefill_policies",
+    "available_router_policies",
     "make_decode",
     "make_prefill",
+    "make_router",
     "register_decode",
     "register_prefill",
+    "register_router",
 ]

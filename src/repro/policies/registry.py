@@ -76,6 +76,24 @@ class DecodePolicy(Protocol):
     def observe(self, batch: Sequence[Request], actual: float) -> None: ...
 
 
+@runtime_checkable
+class RouterPolicy(Protocol):
+    """Multi-server routing: picks which replica a request lands on.
+
+    ``replicas`` is a sequence of replica views (`repro.serving.router.
+    ReplicaState`: in-flight count, pending prefill tokens, throughput
+    estimate, prefix-match probe); the policy returns an index into it.
+    Where a request lands decides whether within-replica urgency scheduling
+    can save its TTFT at all, so this is the fleet-level half of the
+    scheduling story.
+    """
+
+    name: str
+
+    def select(self, replicas: Sequence[Any], request: Request,
+               prompt: Sequence[int]) -> int: ...
+
+
 @dataclass(frozen=True)
 class PolicySpec:
     """Serializable policy reference: registered name + construction kwargs.
@@ -104,6 +122,7 @@ class _Entry:
 
 _PREFILL: Dict[str, _Entry] = {}
 _DECODE: Dict[str, _Entry] = {}
+_ROUTER: Dict[str, _Entry] = {}
 
 
 def register_prefill(name: str, **defaults):
@@ -131,6 +150,16 @@ def register_decode(name: str, **defaults):
     return deco
 
 
+def register_router(name: str, **defaults):
+    """Class decorator: register a routing policy under ``name``."""
+
+    def deco(cls):
+        _ROUTER[name] = _Entry(cls, defaults)
+        return cls
+
+    return deco
+
+
 def available_prefill_policies() -> Tuple[str, ...]:
     return tuple(sorted(_PREFILL))
 
@@ -139,12 +168,17 @@ def available_decode_policies() -> Tuple[str, ...]:
     return tuple(sorted(_DECODE))
 
 
+def available_router_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_ROUTER))
+
+
 def available_policies() -> Dict[str, Tuple[str, ...]]:
     """Every registered policy name, per side — the CLI help / parity-test
     enumeration entry point."""
     return {
         "prefill": available_prefill_policies(),
         "decode": available_decode_policies(),
+        "router": available_router_policies(),
     }
 
 
@@ -205,3 +239,8 @@ def make_decode(
     engine's ``slo_margin``) without knowing which policies take them.
     """
     return _build(_DECODE, "decode", spec, (lut,), soft_defaults)
+
+
+def make_router(spec: Union[str, PolicySpec], **soft_defaults: Any) -> RouterPolicy:
+    """Construct a registered routing policy from a spec (or bare name)."""
+    return _build(_ROUTER, "router", spec, (), soft_defaults)

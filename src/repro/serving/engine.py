@@ -124,7 +124,9 @@ class DecodeEngine:
         """Transfer prefill KV into a decode slot (the PD handoff)."""
         r = lr.req
         need = r.input_len + r.output_len
-        slot = self.alloc.alloc(need)
+        # prefix-cache credit: tokens matched at submit time share KV with an
+        # earlier prompt and don't charge the budget (serving/prefixcache.py)
+        slot = self.alloc.alloc(need, credit=r.prefix_hit_tokens)
         if slot is None:
             return False
         lr.slot = slot

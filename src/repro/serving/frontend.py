@@ -57,6 +57,35 @@ BACKPRESSURE_POLICIES: Tuple[str, ...] = ("block", "shed")
 _EOS = object()  # end-of-stream marker inside handle buffers
 
 
+async def drive_replay(
+    submit: Any,
+    pairs: Sequence[Tuple[Request, Sequence[int]]],
+    clients: int = 4,
+    on_client_token: Optional[Any] = None,
+) -> None:
+    """The one open-loop replay drive, shared by `AsyncServeSession.replay`
+    and `RouterSession.replay` (one body, so their await sequences cannot
+    drift — the bit-parity contracts depend on that): submit each pair at
+    its arrival in stable order via ``submit(request, prompt, at=...)``,
+    then drain every handle with ``clients`` concurrent consumer tasks."""
+    order = sorted(range(len(pairs)), key=lambda i: pairs[i][0].arrival)
+    handles = []
+    for i in order:
+        req, prompt = pairs[i]
+        handles.append(await submit(req, prompt, at=req.arrival))
+
+    async def consume(c: int) -> None:
+        async def drain_one(h: "RequestHandle") -> None:
+            async for tok in h.stream():
+                if on_client_token is not None:
+                    on_client_token(c, tok)
+
+        await asyncio.gather(*(drain_one(h) for h in handles[c::clients]))
+
+    clients = max(1, clients)
+    await asyncio.gather(*(consume(c) for c in range(clients)))
+
+
 class RequestHandle:
     """A client's view of one submitted request.
 
@@ -191,6 +220,7 @@ class AsyncServeSession:
         stream_buffer: int = 16,
         backpressure: str = "block",
         idle_wait: float = 0.001,
+        prefix_cache: Optional[Any] = None,
     ):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(
@@ -203,6 +233,7 @@ class AsyncServeSession:
             max_queue_depth=max_queue_depth,
             tenant_queue_depth=tenant_queue_depth,
             on_token=self._collect_token,
+            prefix_cache=prefix_cache,
         )
         self.stream_buffer = stream_buffer
         self.backpressure = backpressure
@@ -370,22 +401,7 @@ class AsyncServeSession:
         `ServeSession.run` returns, and (on a `ManualClock`) with identical
         per-token timestamps.
         """
-        order = sorted(range(len(pairs)), key=lambda i: pairs[i][0].arrival)
-        handles = []
-        for i in order:
-            req, prompt = pairs[i]
-            handles.append(await self.submit(req, prompt, at=req.arrival))
-
-        async def consume(c: int) -> None:
-            async def drain_one(h: RequestHandle) -> None:
-                async for tok in h.stream():
-                    if on_client_token is not None:
-                        on_client_token(c, tok)
-
-            await asyncio.gather(*(drain_one(h) for h in handles[c::clients]))
-
-        clients = max(1, clients)
-        await asyncio.gather(*(consume(c) for c in range(clients)))
+        await drive_replay(self.submit, pairs, clients, on_client_token)
         return {rid: list(toks) for rid, toks in self.session.outputs.items()}
 
     # ------------------------------------------------------------- stepper

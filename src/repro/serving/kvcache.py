@@ -43,40 +43,61 @@ def scatter_slots(cfg: ModelConfig, cache: Dict, sub: Dict, slot_idx: jax.Array)
 
 @dataclass
 class SlotAllocator:
-    """Host bookkeeping: slot ids + KV token budget (admission control)."""
+    """Host bookkeeping: slot ids + KV token budget (admission control).
+
+    ``credit`` on `can_admit`/`alloc` is the prefix-cache allowance
+    (`repro.serving.prefixcache`): tokens whose KV is shared with an
+    already-admitted prompt don't charge the budget, so a prefix-heavy
+    workload admits deeper than its raw token mass suggests. The charge is
+    clamped to >= 0 and remembered per slot, keeping ``release`` symmetric.
+    """
 
     max_slots: int
     kv_cap_tokens: int
 
     free: List[int] = field(default_factory=list)
     live_tokens: Dict[int, int] = field(default_factory=dict)
+    # running sum of live_tokens: can_admit runs per queued request per
+    # step, so it must not re-sum the live set on every call
+    _used: int = field(default=0, init=False, repr=False)
 
     def __post_init__(self) -> None:
         self.free = list(range(self.max_slots))[::-1]
+        self._used = sum(self.live_tokens.values())
 
     @property
     def used_tokens(self) -> int:
-        return sum(self.live_tokens.values())
+        return self._used
 
-    def can_admit(self, need_tokens: int) -> bool:
-        return bool(self.free) and self.used_tokens + need_tokens <= self.kv_cap_tokens
+    def can_admit(self, need_tokens: int, credit: int = 0) -> bool:
+        charged = max(0, need_tokens - credit)
+        return bool(self.free) and self._used + charged <= self.kv_cap_tokens
 
-    def alloc(self, need_tokens: int) -> Optional[int]:
-        if not self.can_admit(need_tokens):
+    def alloc(self, need_tokens: int, credit: int = 0) -> Optional[int]:
+        if not self.can_admit(need_tokens, credit):
             return None
         slot = self.free.pop()
-        self.live_tokens[slot] = need_tokens
+        charged = max(0, need_tokens - credit)
+        self.live_tokens[slot] = charged
+        self._used += charged
         return slot
 
     def release(self, slot: int) -> None:
         if slot in self.live_tokens:
-            del self.live_tokens[slot]
+            self._used -= self.live_tokens.pop(slot)
             self.free.append(slot)
 
     def snapshot(self) -> Dict:
-        return dict(live_tokens=dict(self.live_tokens))
+        # the free list is part of the state: its ORDER decides which slot
+        # ids future allocs hand out, and replay/failover determinism (the
+        # router's restore path) depends on reproducing exactly that
+        return dict(live_tokens=dict(self.live_tokens), free=list(self.free))
 
     def restore(self, snap: Dict) -> None:
         self.live_tokens = dict(snap["live_tokens"])
-        live = set(self.live_tokens)
-        self.free = [s for s in range(self.max_slots) if s not in live][::-1]
+        self._used = sum(self.live_tokens.values())
+        if "free" in snap:
+            self.free = list(snap["free"])
+        else:  # legacy snapshot without a free list: synthesize a canonical one
+            live = set(self.live_tokens)
+            self.free = [s for s in range(self.max_slots) if s not in live][::-1]

@@ -1,0 +1,175 @@
+"""Hash-prefix trie over admitted prompts (prefix-cache-aware admission).
+
+Prompts are chunked into fixed-size token blocks and each block is keyed by
+a CRC32 chain hash of (parent hash, block tokens) — the vLLM-style scheme
+where a block's identity embeds its whole prefix, so a plain dict of node
+hashes behaves as a trie without storing token strings. Two call sites:
+
+  * **Session admission** (`ServeSession.submit`): every admitted prompt is
+    matched then inserted; the matched token count becomes the request's
+    ``prefix_hit_tokens``, which (a) feeds the per-session hit accounting
+    in `SessionMetrics` and (b) is granted back to the `SlotAllocator` as a
+    KV token-budget *credit* — reused prefix KV doesn't charge the cap.
+  * **Router affinity** (`repro.serving.router`): the router keeps one
+    `PrefixCache` per replica as its *own* record of which prefixes it sent
+    where (a real router can't see replica internals), and the
+    ``prefix-affinity`` policy routes to the replica with the longest match.
+
+The credit is pure admission accounting: the engine still computes full
+prefill for every prompt, so token outputs are invariant to the cache (the
+engine-wide "policy changes timing, never tokens" contract). Hash
+collisions merge paths; with CRC32 chaining over full prefixes they are
+vanishingly rare at serving scale and only perturb accounting, never
+correctness.
+
+Capacity: ``max_blocks`` bounds the trie; over budget, least-recently-used
+*leaf* nodes are evicted (interior nodes are pinned by their children, so
+eviction always removes a longest suffix first — the trie never holds a
+block whose prefix it has dropped).
+
+See DESIGN.md §router.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+_ROOT = 0  # chain hash of the empty prefix
+
+# The one default block size, shared by every constructor that builds a
+# cache (`PrefixCache`, `RouterSession`) so hit rates measured anywhere are
+# comparable by default; the harness overrides it for its tiny engine twins
+# (`HarnessConfig.prefix_block`).
+DEFAULT_PREFIX_BLOCK = 16
+
+
+def _chain_hash(parent: int, block: Sequence[int]) -> int:
+    """CRC32 of (parent hash ‖ block tokens): a block id that encodes its
+    full prefix, so equal ids mean equal token paths (modulo collisions)."""
+    data = struct.pack(f"<q{len(block)}q", parent, *[int(t) for t in block])
+    h = zlib.crc32(data)
+    return h if h != _ROOT else 1  # never collide with the root sentinel
+
+
+@dataclass
+class _Node:
+    parent: int
+    n_children: int = 0
+    last_used: int = 0
+
+
+@dataclass
+class PrefixCacheStats:
+    """Cumulative accounting for one `PrefixCache`."""
+
+    lookups: int = 0  # admit() calls
+    hits: int = 0  # admits that matched >= 1 block
+    lookup_tokens: int = 0  # full-block tokens eligible for matching
+    hit_tokens: int = 0  # tokens served from the trie
+    inserted_blocks: int = 0
+    evicted_blocks: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        """Token-weighted hit rate over everything admitted so far."""
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens else 0.0
+
+    def as_dict(self) -> Dict:
+        return dict(
+            lookups=self.lookups,
+            hits=self.hits,
+            lookup_tokens=self.lookup_tokens,
+            hit_tokens=self.hit_tokens,
+            hit_rate=self.hit_rate,
+            inserted_blocks=self.inserted_blocks,
+            evicted_blocks=self.evicted_blocks,
+        )
+
+
+class PrefixCache:
+    """Block-hashed prefix trie with LRU leaf eviction and hit accounting."""
+
+    def __init__(self, block: int = DEFAULT_PREFIX_BLOCK, max_blocks: Optional[int] = None):
+        if block < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        if max_blocks is not None and max_blocks < 1:
+            raise ValueError(f"max_blocks must be >= 1 or None, got {max_blocks}")
+        self.block = block
+        self.max_blocks = max_blocks
+        self.stats = PrefixCacheStats()
+        self._nodes: Dict[int, _Node] = {}
+        self._tick = 0  # logical LRU clock (no wall time: determinism)
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    # ---------------------------------------------------------------- match
+    def _blocks(self, tokens: Sequence[int]) -> Tuple[Tuple[int, ...], ...]:
+        b = self.block
+        n_full = len(tokens) // b
+        return tuple(tuple(tokens[i * b : (i + 1) * b]) for i in range(n_full))
+
+    def match(self, tokens: Sequence[int]) -> int:
+        """Longest cached prefix of ``tokens`` in whole tokens (full blocks
+        only). Pure peek: no insertion, no stats, no LRU touch — safe for
+        routing probes that will not land the request here."""
+        h = _ROOT
+        matched = 0
+        for blk in self._blocks(tokens):
+            h = _chain_hash(h, blk)
+            if h not in self._nodes:
+                break
+            matched += len(blk)
+        return matched
+
+    # ---------------------------------------------------------------- admit
+    def admit(self, tokens: Sequence[int]) -> Tuple[int, int]:
+        """Match then insert an admitted prompt; returns ``(hit_tokens,
+        eligible_tokens)`` where eligible is the full-block token count the
+        lookup could at best have matched."""
+        blocks = self._blocks(tokens)
+        eligible = sum(len(b) for b in blocks)
+        self._tick += 1
+        h = _ROOT
+        hit = 0
+        matching = True
+        for blk in blocks:
+            parent = h
+            h = _chain_hash(h, blk)
+            node = self._nodes.get(h)
+            if node is not None:
+                node.last_used = self._tick
+                if matching:
+                    hit += len(blk)
+                continue
+            matching = False
+            self._nodes[h] = _Node(parent=parent, last_used=self._tick)
+            if parent != _ROOT:
+                self._nodes[parent].n_children += 1
+            self.stats.inserted_blocks += 1
+        s = self.stats
+        s.lookups += 1
+        s.lookup_tokens += eligible
+        s.hit_tokens += hit
+        if hit:
+            s.hits += 1
+        self._evict()
+        return hit, eligible
+
+    # ---------------------------------------------------------------- evict
+    def _evict(self) -> None:
+        if self.max_blocks is None:
+            return
+        while len(self._nodes) > self.max_blocks:
+            # LRU leaf: O(n) scan, fine at the block counts a replica holds;
+            # leaves only, so a surviving block always has its whole prefix
+            victim = min(
+                (h for h, n in self._nodes.items() if n.n_children == 0),
+                key=lambda h: self._nodes[h].last_used,
+            )
+            parent = self._nodes.pop(victim).parent
+            if parent != _ROOT:
+                self._nodes[parent].n_children -= 1
+            self.stats.evicted_blocks += 1

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.request import Phase, Request
 from repro.serving.engine import DisaggServer, LiveRequest
+from repro.serving.prefixcache import PrefixCache
 
 # on_token(request, token, t_virtual) — called as each token is produced.
 TokenCallback = Callable[[Request, int, float], None]
@@ -60,7 +61,12 @@ class SessionMetrics:
 
     submitted: int = 0
     accepted: int = 0
-    rejected: int = 0  # shed by admission control
+    # shed by admission control — always rejected_global + rejected_tenant
+    # (kept as its own counter for schema compatibility); the split tells a
+    # per-tenant shed report "fleet full" apart from "quota hit"
+    rejected: int = 0
+    rejected_global: int = 0  # global queue bound (max_queue_depth) hit
+    rejected_tenant: int = 0  # per-tenant quota (tenant_queue_depth) hit
     completed: int = 0
     cancelled: int = 0  # withdrawn by the client (disconnect / cancel())
     # cancellations forced by the async frontend's backpressure policy when a
@@ -72,6 +78,13 @@ class SessionMetrics:
     rejected_by_tenant: Dict[str, int] = field(default_factory=dict)
     completed_by_tenant: Dict[str, int] = field(default_factory=dict)
     cancelled_by_tenant: Dict[str, int] = field(default_factory=dict)
+    # prefix-cache admission accounting (zero unless the session was built
+    # with a PrefixCache); hit tokens are also granted to the SlotAllocator
+    # as a KV budget credit — see serving/prefixcache.py
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_lookup_tokens: int = 0
 
     def _bump(self, table: Dict[str, int], tenant: str) -> None:
         table[tenant] = table.get(tenant, 0) + 1
@@ -92,6 +105,7 @@ class ServeSession:
         max_queue_depth: Optional[int] = FROM_CONFIG,
         on_token: Optional[TokenCallback] = None,
         tenant_queue_depth: Optional[int] = FROM_CONFIG,
+        prefix_cache: Optional["PrefixCache"] = None,
     ):
         self.server = server
         self.ecfg = server.ecfg
@@ -101,6 +115,10 @@ class ServeSession:
         if tenant_queue_depth is FROM_CONFIG:
             tenant_queue_depth = server.ecfg.tenant_queue_depth
         self.tenant_queue_depth = tenant_queue_depth  # None = no per-tenant quota
+        # prefix-cache-aware admission: every admitted prompt is matched then
+        # inserted; matched tokens become the request's prefix_hit_tokens
+        # (KV budget credit + hit metrics). None = no prefix awareness.
+        self.prefix_cache = prefix_cache
         self.on_token = on_token
 
         self.queue: List[LiveRequest] = []  # waiting for / in chunked prefill
@@ -132,17 +150,34 @@ class ServeSession:
         m.submitted += 1
         m._bump(m.submitted_by_tenant, request.tenant)
         self.requests.append(request)
-        shed = self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth
-        if not shed and self.tenant_queue_depth is not None:
+        shed_global = (
+            self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth
+        )
+        shed_tenant = False
+        if not shed_global and self.tenant_queue_depth is not None:
             queued = sum(1 for lr in self.queue if lr.req.tenant == request.tenant)
-            shed = queued >= self.tenant_queue_depth
-        if shed:
+            shed_tenant = queued >= self.tenant_queue_depth
+        if shed_global or shed_tenant:
             request.phase = Phase.FAILED
             m.rejected += 1
+            if shed_global:
+                m.rejected_global += 1
+            else:
+                m.rejected_tenant += 1
             m.rejected_rids.append(request.rid)
             m._bump(m.rejected_by_tenant, request.tenant)
             return False
         m.accepted += 1
+        if self.prefix_cache is not None:
+            # admitted prompts only enter the trie: a shed prompt's KV never
+            # materializes, so indexing it would advertise phantom reuse
+            hit, eligible = self.prefix_cache.admit(prompt)
+            request.prefix_hit_tokens = hit
+            m.prefix_lookups += 1
+            m.prefix_lookup_tokens += eligible
+            m.prefix_hit_tokens += hit
+            if hit:
+                m.prefix_hits += 1
         self.queue.append(LiveRequest(req=request, tokens=list(prompt)))
         if on_token is not None:
             self._callbacks[request.rid] = on_token
@@ -313,6 +348,8 @@ class ServeSession:
             submitted=m.submitted,
             accepted=m.accepted,
             rejected=m.rejected,
+            rejected_global=m.rejected_global,
+            rejected_tenant=m.rejected_tenant,
             completed=m.completed,
             cancelled=m.cancelled,
             backpressure_shed=m.backpressure_shed,
@@ -322,5 +359,16 @@ class ServeSession:
             rejected_by_tenant=dict(m.rejected_by_tenant),
             completed_by_tenant=dict(m.completed_by_tenant),
             cancelled_by_tenant=dict(m.cancelled_by_tenant),
+            prefix=dict(
+                lookups=m.prefix_lookups,
+                hits=m.prefix_hits,
+                hit_tokens=m.prefix_hit_tokens,
+                lookup_tokens=m.prefix_lookup_tokens,
+                hit_rate=(
+                    m.prefix_hit_tokens / m.prefix_lookup_tokens
+                    if m.prefix_lookup_tokens
+                    else 0.0
+                ),
+            ),
             requests=per,
         )

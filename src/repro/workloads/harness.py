@@ -1,6 +1,6 @@
 """Evaluation harness: (scenario × prefill × decode × backend) grids.
 
-One report schema over three backends:
+One report schema over four backends:
 
     sim          `DisaggSimulator` via `run_policy` — paper-scale lengths
                  and SLOs, discrete-event time
@@ -16,6 +16,14 @@ One report schema over three backends:
                  `engine` backend bit-for-bit (the async/sync parity
                  contract), so any divergence between those two columns is
                  a frontend bug, not noise.
+    router       ``router_replicas`` such servers behind a `RouterSession`
+                 (repro.serving.router): placement by ``router_policy``
+                 from the routing registry, per-replica prefix caches doing
+                 admission-time hit accounting. The cell carries a
+                 ``router`` block (per-replica assigned/completed counts +
+                 prefix hit rates). With 1 replica it reproduces the
+                 async-engine cell bit-for-bit — the routing layer adds no
+                 clock reads of its own.
 
 Scenario traces are paper-scale (prompts up to 128K tokens); the engine
 backend maps each request onto an engine-scale twin (prompt/output lengths
@@ -34,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -44,7 +53,7 @@ from repro.sim.metrics import attainment, attainment_by, goodput
 from repro.sim.simulator import SimConfig, run_policy
 from repro.workloads.scenarios import make_scenario
 
-BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine")
+BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine", "router")
 
 
 @dataclass(frozen=True)
@@ -87,6 +96,14 @@ class HarnessConfig:
     async_clients: int = 4
     stream_buffer: int = 16
     backpressure: str = "block"
+    # router backend: N AsyncServeSession replicas behind a RouterSession
+    # (repro.serving.router), placement by a registered routing policy;
+    # prefix_block is the prefix-trie block size for both the per-replica
+    # session caches and the router's routing indexes
+    router_replicas: int = 2
+    router_policy: str = "least-queued"
+    prefix_block: int = 4
+    prefix_cache_blocks: Optional[int] = None
 
     def as_dict(self) -> Dict:
         # the report's run-identity block: every knob (asdict recurses into
@@ -119,6 +136,14 @@ class _EngineBundle:
         return self
 
 
+def _group_prefix_tokens(group: str, n: int, vocab_size: int) -> List[int]:
+    """The shared prompt template for a prefix group: deterministic in the
+    group name alone (CRC32 seed, not Python's salted hash), so every twin
+    of the same group starts with literally identical tokens across runs."""
+    rng = np.random.default_rng(zlib.crc32(group.encode("utf-8")))
+    return list(map(int, rng.integers(2, vocab_size, n)))
+
+
 def to_engine_requests(
     reqs: Sequence[Request], hcfg: HarnessConfig, vocab_size: int, rng: np.random.Generator
 ) -> List[Tuple[Request, List[int]]]:
@@ -131,6 +156,11 @@ def to_engine_requests(
     (``engine_slo_ttft_scale`` / ``engine_slo_tpot_scale``) so relative
     tier tightness — premium vs batch — survives and attainment stays
     policy-sensitive rather than trivially 1.0.
+
+    Requests carrying a ``prefix_group`` (shared-system-prompt scenarios)
+    get prompts that literally begin with the group's template for
+    ``prefix_frac`` of their length — the token-level structure the prefix
+    cache and prefix-affinity routing act on.
     """
     if not reqs:
         return []
@@ -140,7 +170,15 @@ def to_engine_requests(
     for r in reqs:
         n_in = 2 + round((hcfg.engine_max_prompt - 2) * r.input_len / max_in)
         n_out = max(1, round(hcfg.engine_max_output * r.output_len / max_out))
-        prompt = list(map(int, rng.integers(2, vocab_size, n_in)))
+        if r.prefix_group:
+            # template head + unique tail; at least one unique token so no
+            # two prompts are fully identical
+            k = min(n_in - 1, max(0, round(n_in * r.prefix_frac)))
+            prompt = _group_prefix_tokens(r.prefix_group, k, vocab_size) + list(
+                map(int, rng.integers(2, vocab_size, n_in - k))
+            )
+        else:
+            prompt = list(map(int, rng.integers(2, vocab_size, n_in)))
         pairs.append(
             (
                 Request(
@@ -154,6 +192,8 @@ def to_engine_requests(
                     ),
                     tenant=r.tenant,
                     slo_class=r.slo_class,
+                    prefix_group=r.prefix_group,
+                    prefix_frac=r.prefix_frac,
                 ),
                 prompt,
             )
@@ -196,10 +236,20 @@ def _run_sim(reqs, prefill: str, decode: str, hcfg: HarnessConfig) -> List[Reque
     return res.requests
 
 
-def _engine_setup(reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle):
-    """Shared (engine | async-engine) setup: request twins + a fresh server
-    on a deterministic ManualClock. Identical construction is what makes
-    the two engine backends directly comparable."""
+def _engine_setup(
+    reqs,
+    prefill: str,
+    decode: str,
+    hcfg: HarnessConfig,
+    bundle: _EngineBundle,
+    n_servers: int = 1,
+):
+    """Shared (engine | async-engine | router) setup: request twins plus
+    ``n_servers`` fresh servers, each on its own deterministic ManualClock.
+    Identical construction is what makes the engine backends directly
+    comparable (and the 1-replica router cell bit-identical to async-engine).
+    Returns ``(servers, pairs)``; single-server callers unpack ``servers[0]``.
+    """
     from repro.serving.clock import ManualClock
     from repro.serving.engine import DisaggServer, EngineConfig
 
@@ -215,10 +265,13 @@ def _engine_setup(reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: 
         admission_queue_depth=hcfg.queue_depth,
         tenant_queue_depth=hcfg.tenant_quota,
     )
-    server = DisaggServer(
-        bundle.model, bundle.params, ecfg, clock=ManualClock(auto_step=1e-4)
-    )
-    return server, pairs
+    servers = [
+        DisaggServer(
+            bundle.model, bundle.params, ecfg, clock=ManualClock(auto_step=1e-4)
+        )
+        for _ in range(n_servers)
+    ]
+    return servers, pairs
 
 
 def _run_engine(
@@ -226,7 +279,7 @@ def _run_engine(
 ) -> List[Request]:
     from repro.serving.session import ServeSession
 
-    server, pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
+    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
     session = ServeSession(server)
     session.run(pairs)
     return [r for r, _ in pairs]
@@ -241,7 +294,7 @@ def _run_async_engine(
 
     from repro.serving.frontend import AsyncServeSession
 
-    server, pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
+    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
 
     async def _serve() -> None:
         frontend = AsyncServeSession(
@@ -254,6 +307,64 @@ def _run_async_engine(
 
     asyncio.run(_serve())
     return [r for r, _ in pairs]
+
+
+def router_cell_block(s: Dict) -> Dict:
+    """Project a `RouterSession.summary()` into the report cell's ``router``
+    block: routing identity, fleet-wide prefix accounting, and per-replica
+    counters (with the global/tenant shed split, so a per-tenant shed
+    report can tell "fleet full" from "quota hit" per replica)."""
+    return dict(
+        policy=s["routing"]["policy"],
+        replicas=s["routing"]["replicas"],
+        assigned=s["routing"]["assigned"],
+        prefix=s["prefix"],
+        per_replica=[
+            dict(
+                replica=ps["replica"],
+                assigned=ps["assigned"],
+                submitted=ps["submitted"],
+                completed=ps["completed"],
+                rejected=ps["rejected"],
+                rejected_global=ps["rejected_global"],
+                rejected_tenant=ps["rejected_tenant"],
+                cancelled=ps["cancelled"],
+                prefix=ps["prefix"],
+            )
+            for ps in s["per_replica"]
+        ],
+    )
+
+
+def _run_router(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+) -> Tuple[List[Request], Dict]:
+    """The fleet cell: ``router_replicas`` servers behind a `RouterSession`,
+    placement by ``router_policy``. Returns the terminal requests plus the
+    per-replica breakdown block for the report."""
+    import asyncio
+
+    from repro.serving.router import RouterSession
+
+    servers, pairs = _engine_setup(
+        reqs, prefill, decode, hcfg, bundle, n_servers=hcfg.router_replicas
+    )
+
+    async def _serve() -> RouterSession:
+        router = RouterSession(
+            servers,
+            policy=hcfg.router_policy,
+            stream_buffer=hcfg.stream_buffer,
+            backpressure=hcfg.backpressure,
+            prefix_block=hcfg.prefix_block,
+            prefix_cache_blocks=hcfg.prefix_cache_blocks,
+        )
+        async with router:
+            await router.replay(pairs, clients=hcfg.async_clients)
+        return router
+
+    router = asyncio.run(_serve())
+    return [r for r, _ in pairs], router_cell_block(router.summary())
 
 
 def evaluate_cell(
@@ -283,12 +394,15 @@ def evaluate_cell(
         # engine cell's wall_time_s carries that one-time cost
         bundle = (_bundle or _EngineBundle(hcfg.engine_arch)).build()
     t0 = time.perf_counter()
+    router_block = None
     if backend == "sim":
         terminal = _run_sim(reqs, prefill, decode, hcfg)
     elif backend == "engine":
         terminal = _run_engine(reqs, prefill, decode, hcfg, bundle)
-    else:
+    elif backend == "async-engine":
         terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle)
+    else:
+        terminal, router_block = _run_router(reqs, prefill, decode, hcfg, bundle)
     cell = dict(
         scenario=scenario,
         prefill=prefill,
@@ -297,6 +411,8 @@ def evaluate_cell(
         wall_time_s=time.perf_counter() - t0,
     )
     cell.update(_cell_report(terminal))
+    if router_block is not None:
+        cell["router"] = router_block
     return cell
 
 

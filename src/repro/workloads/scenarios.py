@@ -20,6 +20,8 @@ Built-ins:
     multi-tenant    3 tenants with distinct length distributions and
                     TTFT/TPOT SLO classes (premium / standard / batch)
     heavy-head      long_frac cranked up to stress HOL blocking
+    prefix-heavy    shared-system-prompt tenants (prefix-cache-friendly:
+                    each group's prompts start with one template)
     replay          JSONL trace via `load_trace` (requires path=...)
 """
 from __future__ import annotations
@@ -65,6 +67,12 @@ class TenantSpec:
     weight: float = 1.0
     lengths: LengthDist = LengthDist()
     slo_class: str = "standard"
+    # fraction of each prompt that is the tenant's shared template (system
+    # prompt / few-shot header). 0 = fully unique prompts; > 0 stamps
+    # Request.prefix_group/prefix_frac so the engine harness materializes
+    # literally shared prefix tokens — what prefix-cache-aware admission
+    # and prefix-affinity routing exploit.
+    shared_prefix_frac: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -87,6 +95,11 @@ class Scenario:
         for t in self.tenants:
             if t.weight <= 0:
                 raise ValueError(f"tenant {t.name!r} has non-positive weight {t.weight}")
+            if not 0.0 <= t.shared_prefix_frac < 1.0:
+                raise ValueError(
+                    f"tenant {t.name!r} shared_prefix_frac must be in [0, 1), "
+                    f"got {t.shared_prefix_frac}"
+                )
             if t.slo_class not in self.slo_classes:
                 known = ", ".join(sorted(self.slo_classes))
                 raise ValueError(
@@ -124,6 +137,8 @@ class Scenario:
                     slo=slo,
                     tenant=tenant.name,
                     slo_class=tenant.slo_class,
+                    prefix_group=tenant.name if tenant.shared_prefix_frac > 0 else "",
+                    prefix_frac=tenant.shared_prefix_frac,
                 )
             )
         return reqs
@@ -307,6 +322,36 @@ def heavy_head(n_requests: int = 1000, qps: float = 3.0, long_frac: float = 0.35
         n_requests=n_requests,
         arrivals=PoissonArrivals(qps=qps),
         tenants=(TenantSpec("default", lengths=LengthDist(long_frac=long_frac)),),
+    )
+
+
+@register_scenario("prefix-heavy")
+def prefix_heavy(
+    n_requests: int = 1000,
+    qps: float = 4.0,
+    n_groups: int = 4,
+    prefix_frac: float = 0.7,
+):
+    """Shared-system-prompt tenants: ``n_groups`` apps, each stamping every
+    request with one template covering ``prefix_frac`` of the prompt (RAG /
+    agent / few-shot traffic). The ROADMAP's prefix-cache-friendly workload:
+    per-replica hit rate — and therefore TTFT under load — depends on
+    whether routing keeps a group's requests together (prefix-affinity) or
+    scatters them (round-robin)."""
+    tenants = tuple(
+        TenantSpec(
+            f"app-{g}",
+            lengths=_INTERACTIVE_LENGTHS,
+            slo_class=("premium", "standard")[g % 2],
+            shared_prefix_frac=prefix_frac,
+        )
+        for g in range(n_groups)
+    )
+    return Scenario(
+        name="prefix-heavy",
+        n_requests=n_requests,
+        arrivals=PoissonArrivals(qps=qps),
+        tenants=tenants,
     )
 
 

@@ -8,6 +8,7 @@ from repro.policies import (
     available_decode_policies,
     available_policies,
     available_prefill_policies,
+    available_router_policies,
     make_decode,
     make_prefill,
     register_prefill,
@@ -19,15 +20,19 @@ def _lut():
     return StepTimeLUT(analytic=lambda b, s: 0.005 + 0.0002 * b + 2.4e-7 * s)
 
 
-def test_available_policies_enumerates_both_sides():
+def test_available_policies_enumerates_every_side():
     pol = available_policies()
-    assert set(pol) == {"prefill", "decode"}
+    assert set(pol) == {"prefill", "decode", "router"}
     assert set(pol["prefill"]) == {
         "kairos-urgency", "kairos-urgency-plus", "fcfs", "sjf", "edf",
     }
     assert set(pol["decode"]) == {"kairos-slack", "kairos-slack-greedy", "continuous"}
+    assert set(pol["router"]) == {
+        "round-robin", "least-queued", "slack-aware", "prefix-affinity",
+    }
     assert pol["prefill"] == available_prefill_policies()
     assert pol["decode"] == available_decode_policies()
+    assert pol["router"] == available_router_policies()
 
 
 def test_unknown_name_raises_with_known_names():

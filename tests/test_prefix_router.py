@@ -1,0 +1,478 @@
+"""Multi-server routing + prefix-cache-aware admission, and the slot/session
+substrate fixes underneath them:
+
+  * `PrefixCache` trie semantics (block hashing, accounting, LRU leaf
+    eviction)
+  * `SlotAllocator` regressions: snapshot/restore preserves free-list order
+    (replay determinism), `used_tokens` is a maintained counter that always
+    equals the re-summed live set, prefix credit charges `need - credit`
+  * the `rejected_global` / `rejected_tenant` admission split
+  * routing policies as pure functions of the replica view
+  * `RouterSession`: cross-replica cancellation reclaims the owning
+    replica's slot only; 1-replica routed runs are bit-identical to a bare
+    `AsyncServeSession` on a `ManualClock`; prefix-affinity beats
+    round-robin on the prefix-heavy scenario's hit rate
+  * harness `router` backend + loadgen `--servers/--router` CLI schema
+"""
+import asyncio
+import copy
+from dataclasses import dataclass, field
+from typing import List
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.models import build_model
+from repro.policies import available_policies, make_router
+from repro.serving.clock import ManualClock
+from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.frontend import AsyncServeSession
+from repro.serving.kvcache import SlotAllocator
+from repro.serving.prefixcache import PrefixCache
+from repro.serving.router import RouterSession
+from repro.serving.session import ServeSession
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _server(tiny_model, **ecfg_kw):
+    cfg, model, params = tiny_model
+    kw = dict(max_slots=4, max_len=64, chunk_size=16)
+    kw.update(ecfg_kw)
+    return DisaggServer(
+        model, params, EngineConfig(**kw), clock=ManualClock(auto_step=1e-4)
+    )
+
+
+def _requests(cfg, n=4, max_out=4, seed=0, arrival_gap=0.0):
+    rng = np.random.default_rng(seed)
+    prompts = [list(map(int, rng.integers(2, cfg.vocab_size, int(rng.integers(4, 14)))))
+               for _ in range(n)]
+    return [
+        (
+            Request(rid=i, arrival=arrival_gap * i, input_len=len(p), output_len=max_out,
+                    slo=SLOSpec(ttft=120.0, tpot=10.0)),
+            p,
+        )
+        for i, p in enumerate(prompts)
+    ]
+
+
+# ------------------------------------------------------------- prefix trie
+def test_prefix_trie_match_and_accounting():
+    pc = PrefixCache(block=4)
+    assert pc.admit(list(range(12))) == (0, 12)  # cold: 3 blocks inserted
+    # same 8-token head, new tail: 2 blocks hit, third diverges
+    assert pc.admit(list(range(8)) + [99, 98, 97, 96]) == (8, 12)
+    assert pc.match(list(range(12))) == 12
+    assert pc.match(list(range(8)) + [1, 1, 1, 1]) == 8
+    assert pc.match([7] * 12) == 0
+    # partial final block never matches (only full blocks are keyed)
+    assert pc.match(list(range(6))) == 4
+    s = pc.stats
+    assert s.lookups == 2 and s.hits == 1
+    assert s.hit_tokens == 8 and s.lookup_tokens == 24
+    assert s.hit_rate == pytest.approx(8 / 24)
+
+
+def test_prefix_trie_short_prompt_has_no_full_block():
+    pc = PrefixCache(block=16)
+    assert pc.admit([1, 2, 3]) == (0, 0)
+    assert pc.match([1, 2, 3]) == 0
+    assert len(pc) == 0  # nothing inserted, nothing to match later
+
+
+def test_prefix_trie_lru_evicts_leaves_first():
+    pc = PrefixCache(block=2, max_blocks=3)
+    pc.admit([1, 2, 3, 4, 5, 6, 7, 8])  # 4 blocks -> one eviction
+    assert len(pc) == 3 and pc.stats.evicted_blocks == 1
+    # the evicted block is the LRU *leaf*: the deepest suffix goes first,
+    # so every surviving block still has its whole prefix chain
+    assert pc.match([1, 2, 3, 4, 5, 6, 7, 8]) == 6
+
+
+def test_prefix_trie_validates_args():
+    with pytest.raises(ValueError):
+        PrefixCache(block=0)
+    with pytest.raises(ValueError):
+        PrefixCache(block=4, max_blocks=0)
+
+
+# ----------------------------------------------------------- slot allocator
+def test_restore_preserves_free_list_order():
+    """Regression: restore() used to rebuild `free` as a canonical
+    descending range, so a snapshot/restore round-trip handed out
+    *different* slot ids than an allocator that never snapshotted —
+    breaking the replay determinism router failover relies on."""
+    a = SlotAllocator(max_slots=4, kv_cap_tokens=1000)
+    s0, s1, s2 = a.alloc(1), a.alloc(1), a.alloc(1)
+    a.release(s0)
+    a.release(s2)  # free order now [3, 0, 2]: NOT the canonical [3, 2, 0]
+    snap = a.snapshot()
+
+    b = SlotAllocator(max_slots=4, kv_cap_tokens=1000)
+    b.restore(snap)
+    assert b.free == a.free  # persisted verbatim, not re-synthesized
+    # identical future slot ids with and without the round-trip
+    assert [a.alloc(1) for _ in range(3)] == [b.alloc(1) for _ in range(3)]
+    assert s1 is not None
+
+
+def test_used_tokens_counter_tracks_sum():
+    """used_tokens must be O(1) bookkeeping, and must agree with the
+    re-summed live set through alloc/release/restore churn."""
+    a = SlotAllocator(max_slots=8, kv_cap_tokens=500)
+    rng = np.random.default_rng(0)
+    live: List[int] = []
+    for _ in range(100):
+        if live and rng.random() < 0.4:
+            a.release(live.pop(int(rng.integers(len(live)))))
+        else:
+            slot = a.alloc(int(rng.integers(1, 80)))
+            if slot is not None:
+                live.append(slot)
+        assert a.used_tokens == sum(a.live_tokens.values())
+    snap = a.snapshot()
+    b = SlotAllocator(max_slots=8, kv_cap_tokens=500)
+    b.restore(snap)
+    assert b.used_tokens == sum(b.live_tokens.values()) == a.used_tokens
+
+
+def test_alloc_credit_charges_need_minus_credit():
+    a = SlotAllocator(max_slots=4, kv_cap_tokens=100)
+    s = a.alloc(90, credit=30)
+    assert s is not None and a.used_tokens == 60
+    assert a.can_admit(50, credit=10)  # 60 + 40 <= 100
+    assert not a.can_admit(50, credit=9)
+    # over-credit clamps at zero, never goes negative
+    s2 = a.alloc(10, credit=999)
+    assert s2 is not None and a.used_tokens == 60
+    a.release(s)
+    a.release(s2)
+    assert a.used_tokens == 0
+
+
+# --------------------------------------------------- admission-shed split
+def test_rejected_split_global_vs_tenant(tiny_model):
+    server = _server(tiny_model)
+    sess = ServeSession(server, max_queue_depth=2, tenant_queue_depth=1)
+
+    def req(rid, tenant):
+        return Request(rid=rid, arrival=0.0, input_len=3, output_len=2,
+                       slo=SLOSpec(ttft=120.0, tpot=10.0), tenant=tenant)
+
+    assert sess.submit(req(0, "a"), [5, 6, 7])
+    assert not sess.submit(req(1, "a"), [5, 6, 7])  # tenant quota (global ok)
+    assert sess.submit(req(2, "b"), [5, 6, 7])
+    assert not sess.submit(req(3, "c"), [5, 6, 7])  # global bound (fleet full)
+    m = sess.metrics
+    assert m.rejected_tenant == 1 and m.rejected_global == 1
+    assert m.rejected == m.rejected_global + m.rejected_tenant == 2
+    s = sess.summary()
+    assert s["rejected"] == 2
+    assert s["rejected_global"] == 1 and s["rejected_tenant"] == 1
+
+
+# ------------------------------------------------- prefix-aware admission
+def test_session_prefix_admission_accounting_and_credit(tiny_model):
+    server = _server(tiny_model)
+    sess = ServeSession(server, prefix_cache=PrefixCache(block=4))
+    shared = [9, 8, 7, 6, 5, 4, 3, 2]
+
+    def req(rid, n):
+        return Request(rid=rid, arrival=0.0, input_len=n, output_len=2,
+                       slo=SLOSpec(ttft=120.0, tpot=10.0))
+
+    r0, r1 = req(0, 10), req(1, 10)
+    assert sess.submit(r0, shared + [50, 51])
+    assert sess.submit(r1, shared + [60, 61])
+    assert r0.prefix_hit_tokens == 0
+    assert r1.prefix_hit_tokens == 8  # two shared full blocks
+    m = sess.metrics
+    assert m.prefix_lookups == 2 and m.prefix_hits == 1
+    assert m.prefix_hit_tokens == 8 and m.prefix_lookup_tokens == 16
+    while sess.has_work:
+        sess.step()
+    # token outputs are invariant to the cache: full prefill still ran
+    assert r0.phase == r1.phase == Phase.DONE
+    assert sess.summary()["prefix"]["hit_rate"] == pytest.approx(0.5)
+
+
+# --------------------------------------------------------- router policies
+@dataclass
+class _FakeReplica:
+    in_flight: int = 0
+    pending_prefill_tokens: int = 0
+    mu: float = 1000.0
+    prefixes: List[int] = field(default_factory=list)  # canned match lengths
+
+    def prefix_match(self, prompt):
+        return self.prefixes.pop(0) if self.prefixes else 0
+
+
+def _req(input_len=8):
+    return Request(rid=0, arrival=0.0, input_len=input_len, output_len=4)
+
+
+def test_router_registry_and_round_robin():
+    assert set(available_policies()["router"]) == {
+        "round-robin", "least-queued", "slack-aware", "prefix-affinity"
+    }
+    rr = make_router("round-robin")
+    reps = [_FakeReplica(), _FakeReplica(), _FakeReplica()]
+    assert [rr.select(reps, _req(), []) for _ in range(5)] == [0, 1, 2, 0, 1]
+    with pytest.raises(ValueError, match="router"):
+        make_router("nope")
+
+
+def test_least_queued_picks_min_in_flight():
+    pol = make_router("least-queued")
+    reps = [_FakeReplica(in_flight=3), _FakeReplica(in_flight=1), _FakeReplica(in_flight=2)]
+    assert pol.select(reps, _req(), []) == 1
+    reps[1].in_flight = 3
+    assert pol.select(reps, _req(), []) == 2
+
+
+def test_slack_aware_uses_backlog_over_throughput():
+    pol = make_router("slack-aware")
+    # replica 0: small backlog but slow; replica 1: bigger backlog, much faster
+    reps = [
+        _FakeReplica(pending_prefill_tokens=100, mu=100.0),   # eta (100+8)/100 ~ 1.08
+        _FakeReplica(pending_prefill_tokens=400, mu=1000.0),  # eta (400+8)/1000 ~ 0.41
+    ]
+    assert pol.select(reps, _req(input_len=8), []) == 1
+
+
+def test_prefix_affinity_routes_to_match_else_balances():
+    pol = make_router("prefix-affinity")
+    reps = [_FakeReplica(in_flight=0, prefixes=[0]), _FakeReplica(in_flight=5, prefixes=[8])]
+    assert pol.select(reps, _req(), list(range(8))) == 1  # match beats load
+    reps = [_FakeReplica(in_flight=5, prefixes=[0]), _FakeReplica(in_flight=0, prefixes=[0])]
+    assert pol.select(reps, _req(), list(range(8))) == 1  # no match: balance
+
+
+# ---------------------------------------------------------- router session
+def test_cross_replica_cancel_reclaims_owning_replica_only(tiny_model):
+    """A client that disconnects mid-stream from a routed request reclaims
+    the decode slot on the OWNING replica only; the other replica's stream
+    runs to completion undisturbed."""
+    servers = [_server(tiny_model) for _ in range(2)]
+    (r0, p0), (r1, p1) = _requests(tiny_model[0], n=2, max_out=6, seed=5)
+
+    async def run():
+        router = RouterSession(servers, policy="round-robin")
+        async with router:
+            h0 = await router.submit(r0, p0)
+            h1 = await router.submit(r1, p1)
+
+            async def disconnect_after_first(h):
+                async for _ in h.stream():
+                    break  # client walks away mid-stream
+
+            async def drain(h):
+                async for _ in h.stream():
+                    pass
+
+            await asyncio.gather(disconnect_after_first(h0), drain(h1))
+        return router
+
+    router = asyncio.run(run())
+    assert router.owner_of(r0.rid) == 0 and router.owner_of(r1.rid) == 1
+    assert r0.phase == Phase.CANCELLED and r0.n_generated >= 1
+    assert r1.phase == Phase.DONE
+    own, other = router.replicas[0].frontend.session, router.replicas[1].frontend.session
+    assert own.metrics.cancelled == 1 and other.metrics.cancelled == 0
+    assert other.metrics.completed == 1
+    for sess, srv in zip((own, other), servers):
+        assert sess.queue == [] and sess.waiting_adm == [] and sess.active == []
+        assert srv.decode.alloc.live_tokens == {}
+    assert len(router.outputs[r1.rid]) == r1.n_generated
+    s = router.summary()
+    assert s["cancelled"] == 1 and s["completed"] == 1
+    assert s["routing"]["assigned"] == [1, 1]
+
+
+def test_router_cancel_by_rid_and_unknown_rid(tiny_model):
+    servers = [_server(tiny_model) for _ in range(2)]
+    (r0, p0), = _requests(tiny_model[0], n=1, max_out=4, seed=6)
+
+    async def run():
+        router = RouterSession(servers, policy="least-queued")
+        async with router:
+            h = await router.submit(r0, p0)
+            assert await h.admitted()
+            assert router.cancel(r0.rid) is True
+            assert router.cancel(999) is False
+            await h.result()  # stream terminates via the cancel EOS
+        return router
+
+    router = asyncio.run(run())
+    assert r0.phase == Phase.CANCELLED
+    assert router.summary()["cancelled"] == 1
+
+
+def test_replica_crash_surfaces_after_others_drain(tiny_model):
+    """One replica's engine crash must re-raise out of drain() — but only
+    after the healthy replicas finished their work (no orphaned steppers,
+    no lost completions on the survivors)."""
+    servers = [_server(tiny_model) for _ in range(2)]
+    (r0, p0), (r1, p1) = _requests(tiny_model[0], n=2, max_out=2, seed=12)
+
+    def boom(*a, **kw):
+        raise RuntimeError("replica exploded")
+
+    async def run():
+        router = RouterSession(servers, policy="round-robin")
+        router.replicas[0].frontend.session.step = boom
+        outs = {}
+        with pytest.raises(RuntimeError, match="replica exploded"):
+            async with router:
+                h0 = await router.submit(r0, p0)
+                h1 = await router.submit(r1, p1)
+                outs[0] = [t async for t in h0.stream()]  # EOS on crash
+                outs[1] = [t async for t in h1.stream()]
+        return outs
+
+    outs = asyncio.run(asyncio.wait_for(run(), timeout=60))
+    assert outs[0] == []  # the crashed replica delivered nothing
+    assert r1.phase == Phase.DONE and outs[1]  # the survivor completed
+
+
+def test_single_replica_router_is_bit_identical_to_frontend(tiny_model):
+    """ManualClock determinism: routing through a 1-replica RouterSession
+    must reproduce the bare AsyncServeSession replay bit-for-bit — the
+    router adds no clock reads of its own."""
+    pairs_direct = _requests(tiny_model[0], n=5, max_out=4, seed=2, arrival_gap=0.01)
+    pairs_routed = copy.deepcopy(pairs_direct)
+
+    async def run_direct():
+        frontend = AsyncServeSession(_server(tiny_model))
+        async with frontend:
+            return await frontend.replay(pairs_direct, clients=3)
+
+    async def run_routed():
+        router = RouterSession([_server(tiny_model)], policy="round-robin")
+        async with router:
+            return await router.replay(pairs_routed, clients=3)
+
+    outs_direct = asyncio.run(run_direct())
+    outs_routed = asyncio.run(run_routed())
+    assert outs_direct == outs_routed
+    for (rd, _), (rr, _) in zip(pairs_direct, pairs_routed):
+        assert rd.phase == rr.phase == Phase.DONE
+        # exact equality: same virtual clock reads in the same order
+        assert rd.ttft() == rr.ttft()
+        assert rd.mean_tpot() == rr.mean_tpot()
+        assert rd.token_times == rr.token_times
+
+
+# ------------------------------------------------------- harness + loadgen
+@pytest.mark.parametrize("scenario", ["multi-tenant", "prefix-heavy"])
+def test_harness_router_backend_one_replica_matches_async_engine(scenario):
+    """The acceptance criterion at the report level: the router cell with 1
+    replica carries exactly the async-engine cell's attainment — including
+    on prefix-heavy, where the replica's prefix cache is actively granting
+    KV credits (timing-neutral while the default kv cap stays slack)."""
+    from repro.workloads.harness import HarnessConfig, evaluate_cell
+
+    hcfg = HarnessConfig(n_requests=10, router_replicas=1, router_policy="round-robin")
+    async_cell = evaluate_cell(scenario, "kairos-urgency", "kairos-slack",
+                               "async-engine", hcfg=hcfg)
+    router_cell = evaluate_cell(scenario, "kairos-urgency", "kairos-slack",
+                                "router", hcfg=hcfg)
+    assert router_cell["backend"] == "router"
+    assert router_cell["attainment"] == async_cell["attainment"]
+    assert router_cell["per_tenant"] == async_cell["per_tenant"]
+    assert router_cell["goodput"] == async_cell["goodput"]
+    rb = router_cell["router"]
+    assert rb["replicas"] == 1 and rb["policy"] == "round-robin"
+    assert sum(p["assigned"] for p in rb["per_replica"]) == router_cell["n_requests"]
+    if scenario == "prefix-heavy":
+        assert rb["prefix"]["hit_rate"] > 0  # the credit really was active
+
+
+def test_prefix_affinity_beats_round_robin_hit_rate():
+    """The fleet-level claim: on the prefix-heavy scenario with 2 replicas,
+    prefix-affinity routing achieves a strictly higher session prefix
+    hit-rate than round-robin (which scatters every group across replicas,
+    paying the cold miss per group per replica)."""
+    import dataclasses
+
+    from repro.workloads.harness import HarnessConfig, evaluate_cell
+
+    base = HarnessConfig(n_requests=24, router_replicas=2)
+    cells = {}
+    for policy in ("round-robin", "prefix-affinity"):
+        hcfg = dataclasses.replace(base, router_policy=policy)
+        cells[policy] = evaluate_cell(
+            "prefix-heavy", "kairos-urgency", "kairos-slack", "router", hcfg=hcfg
+        )
+    rates = {k: c["router"]["prefix"]["hit_rate"] for k, c in cells.items()}
+    assert rates["prefix-affinity"] > rates["round-robin"], rates
+    assert rates["round-robin"] > 0  # shared prefixes hit even when scattered
+    for c in cells.values():
+        rb = c["router"]
+        assert sum(p["assigned"] for p in rb["per_replica"]) == c["n_requests"]
+        assert sum(p["completed"] for p in rb["per_replica"]) == c["n_completed"]
+
+
+def test_prefix_heavy_scenario_stamps_groups():
+    from repro.workloads.scenarios import make_scenario
+
+    reqs = make_scenario("prefix-heavy", n_requests=30, n_groups=3).generate(0)
+    groups = {r.prefix_group for r in reqs}
+    assert groups <= {"app-0", "app-1", "app-2"} and len(groups) >= 2
+    assert all(r.prefix_frac == 0.7 for r in reqs)
+    # determinism: same seed, same trace
+    again = make_scenario("prefix-heavy", n_requests=30, n_groups=3).generate(0)
+    assert [(r.rid, r.arrival, r.input_len, r.prefix_group) for r in reqs] == \
+           [(r.rid, r.arrival, r.input_len, r.prefix_group) for r in again]
+
+
+def test_twin_prompts_share_group_prefixes():
+    import numpy as np
+
+    from repro.workloads.harness import (
+        HarnessConfig,
+        _group_prefix_tokens,
+        to_engine_requests,
+    )
+    from repro.workloads.scenarios import make_scenario
+
+    reqs = make_scenario("prefix-heavy", n_requests=30).generate(1)
+    pairs = to_engine_requests(reqs, HarnessConfig(), 256, np.random.default_rng(1))
+    assert {r.prefix_group for r, _ in pairs} != {""}
+    for r, p in pairs:
+        # every prompt literally begins with its group's template (cut to
+        # this request's own head length — shorter prompts share less)
+        k = min(r.input_len - 1, round(r.input_len * r.prefix_frac))
+        assert p[:k] == _group_prefix_tokens(r.prefix_group, k, 256)
+        assert len(p) == r.input_len
+
+
+def test_loadgen_cli_router_fleet(tmp_path):
+    from repro.launch import loadgen
+
+    out = tmp_path / "router-report.json"
+    report = loadgen.main([
+        "--scenario", "prefix-heavy", "--n", "10", "--clients", "2",
+        "--servers", "2", "--router", "prefix-affinity", "--out", str(out),
+    ])
+    assert out.exists()
+    cell, = report["cells"]
+    assert cell["backend"] == "router"
+    for key in ("attainment", "per_tenant", "goodput", "shed", "cancelled", "loadgen"):
+        assert key in cell
+    rb = cell["router"]
+    assert rb["policy"] == "prefix-affinity" and rb["replicas"] == 2
+    assert sum(rb["assigned"]) == cell["n_requests"]
+    assert len(rb["per_replica"]) == 2

@@ -35,7 +35,7 @@ from typing import Dict, Tuple
 GATED_METRICS = ("decode_tput_p50", "decode_tput_mean")
 # deterministic (seeded, virtual-time) cell metrics: these decide whether a
 # record refresh is warranted; wall times never do
-MATERIAL_METRICS = GATED_METRICS + ("goodput", "e2e")
+MATERIAL_METRICS = (*GATED_METRICS, "goodput", "e2e")
 
 Key = Tuple[str, str, str, str]
 
@@ -73,7 +73,7 @@ def compare(baseline: Dict, candidate: Dict, max_regress: float) -> Tuple[bool, 
     if not matched:
         return False, "no cells in common between baseline and candidate\n" + "\n".join(lines)
     verdict = f"{failures} regression(s) across {len(matched)} matched cells"
-    return failures == 0, "\n".join(lines + [verdict])
+    return failures == 0, "\n".join([*lines, verdict])
 
 
 def materially_equal(baseline: Dict, candidate: Dict) -> bool:

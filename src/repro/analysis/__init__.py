@@ -1,0 +1,56 @@
+"""`repro.analysis` — project-specific static invariants, machine-checked.
+
+    python -m repro.analysis src/              # text findings, exit 1 if any
+    python -m repro.analysis --select RPA001 --format json src/
+    python -m repro.analysis --write-schema    # record a deliberate schema change
+
+Checkers (see DESIGN.md §analysis for the full contract of each):
+
+    RPA001  clock hygiene    no wall-clock reads outside serving/clock.py
+    RPA002  rng discipline   only explicitly-seeded Generators in decision paths
+    RPA003  async safety     no blocking calls in the asyncio serving modules
+    RPA004  registry coverage  every registered name tested + documented
+    RPA005  metrics schema   summary()/cell key sets match the committed schema
+    RPA000  (framework)      file does not parse — reported, never fatal
+    RPA900  (framework)      suppression pragma without a justification
+
+Suppress a finding with an inline pragma carrying a justification::
+
+    t0 = time.perf_counter()  # repro: allow[RPA001] intentional wall time
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.checkers import ALL_CHECKERS
+from repro.analysis.core import (
+    Checker,
+    Finding,
+    Project,
+    find_repo_root,
+    load_project,
+    run_checkers,
+)
+
+__all__ = [
+    "ALL_CHECKERS",
+    "Checker",
+    "Finding",
+    "Project",
+    "analyze",
+    "find_repo_root",
+    "load_project",
+    "run_checkers",
+]
+
+
+def analyze(
+    paths: Sequence[str],
+    select: Optional[Sequence[str]] = None,
+    root: Optional[Path] = None,
+) -> List[Finding]:
+    """Run the full suite over `paths`; the library entry point the CLI and
+    the repo-smoke test share."""
+    project = load_project([Path(p) for p in paths], root=root)
+    return run_checkers(project, [cls() for cls in ALL_CHECKERS], select=select)

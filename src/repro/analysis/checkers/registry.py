@@ -1,0 +1,100 @@
+"""RPA004 — registry coverage.
+
+Every policy and scenario ships through a string-keyed registry
+(`@register_prefill("kairos-urgency")`, `@register_scenario("bursty")`, …),
+which is exactly what makes an *untested* or *undocumented* one invisible:
+nothing imports it by symbol, so dead or broken registrants stay green
+forever. This checker cross-references every registered name against the
+test suite and DESIGN.md — a policy you can ship but nobody exercises, or
+exercise but nobody documents, fails the build at its registration site.
+
+Both registration forms count: the decorator form and the direct
+factory-call form (``register_decode("x", flag=True)(Cls)``).
+
+Matching is word-ish (name delimited by non-``[A-Za-z0-9_-]``), so
+"kairos-slack" inside "kairos-slack-greedy" does **not** count as coverage
+of "kairos-slack".
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterator, List, Tuple
+
+import ast
+
+from repro.analysis.core import Finding, Project, dotted
+from repro.analysis.scopes import SRC_SCOPE
+
+REGISTER_FUNCS = (
+    "register_prefill",
+    "register_decode",
+    "register_router",
+    "register_scenario",
+)
+
+
+def _registrations(project: Project) -> List[Tuple[str, str, str, int]]:
+    """(kind, name, file, line) for every registry call under src."""
+    out: List[Tuple[str, str, str, int]] = []
+    for sf in project.iter_files(SRC_SCOPE.include, SRC_SCOPE.exclude):
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted(node.func)
+            if chain is None:
+                continue
+            kind = chain.split(".")[-1]
+            if kind not in REGISTER_FUNCS:
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Constant):
+                continue
+            name = node.args[0].value
+            if isinstance(name, str):
+                out.append((kind, name, sf.rel, node.lineno))
+    return out
+
+
+def _word_pattern(name: str) -> re.Pattern:
+    return re.compile(rf"(?<![\w-]){re.escape(name)}(?![\w-])")
+
+
+class RegistryCoverageChecker:
+    code = "RPA004"
+    description = (
+        "every registered policy/scenario name must be referenced by at "
+        "least one tests/ file and documented in DESIGN.md"
+    )
+
+    # overridable for fixture tests
+    tests_dir = "tests"
+    doc_file = "DESIGN.md"
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        regs = _registrations(project)
+        if not regs:
+            return
+        tests_root = project.root / self.tests_dir
+        test_texts: Dict[str, str] = {}
+        if tests_root.is_dir():
+            for p in sorted(tests_root.rglob("*.py")):
+                test_texts[p.name] = p.read_text(encoding="utf-8")
+        doc_path = project.root / self.doc_file
+        doc_text = doc_path.read_text(encoding="utf-8") if doc_path.exists() else ""
+
+        for kind, name, rel, line in regs:
+            pat = _word_pattern(name)
+            if not any(pat.search(t) for t in test_texts.values()):
+                yield Finding(
+                    rel, line, self.code,
+                    f"{kind}('{name}') has no reference in {self.tests_dir}/ — "
+                    "a registered-but-untested policy can rot silently; add a "
+                    "test that exercises it by name",
+                )
+            if not pat.search(doc_text):
+                yield Finding(
+                    rel, line, self.code,
+                    f"{kind}('{name}') is not documented in {self.doc_file} — "
+                    "add it to the registry table",
+                )

@@ -1,0 +1,80 @@
+"""RPA002 — RNG discipline.
+
+Scenario generation, the simulator, and engine sampling are deterministic
+functions of (config, seed): every random draw in a decision path must come
+from an explicitly-seeded `np.random.Generator` (or a `jax.random` key, which
+is seeded by construction). Three patterns break that and are banned here:
+
+  * ``np.random.default_rng()`` with no seed argument — seeds from OS entropy,
+    so two runs of the "same" scenario diverge;
+  * module-level ``np.random.<fn>(...)`` — draws from numpy's hidden global
+    state, which any import can perturb;
+  * stdlib ``random.*`` — global state again, plus Python's per-process hash
+    salt leaks into common idioms around it.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import ast
+
+from repro.analysis.core import Finding, Project, import_aliases, resolve_call
+from repro.analysis.scopes import RNG_SCOPE
+
+# numpy.random attributes that are constructors/types, not global-state draws
+_NUMPY_OK = {
+    "default_rng",
+    "Generator",
+    "SeedSequence",
+    "BitGenerator",
+    "PCG64",
+    "Philox",
+}
+
+
+class RngDisciplineChecker:
+    code = "RPA002"
+    description = (
+        "decision-path randomness must be an explicitly-seeded Generator: "
+        "no seedless default_rng(), no np.random global state, no stdlib random"
+    )
+
+    def run(self, project: Project) -> Iterator[Finding]:
+        for sf in project.iter_files(RNG_SCOPE.include, RNG_SCOPE.exclude):
+            if sf.tree is None:
+                continue
+            aliases = import_aliases(sf.tree)
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = resolve_call(node, aliases)
+                if target is None:
+                    continue
+                if target == "numpy.random.default_rng":
+                    if not node.args and not node.keywords:
+                        yield Finding(
+                            sf.rel,
+                            node.lineno,
+                            self.code,
+                            "`default_rng()` without a seed draws from OS "
+                            "entropy; pass an explicit seed expression",
+                        )
+                elif target.startswith("numpy.random."):
+                    attr = target.split(".", 2)[2]
+                    if attr not in _NUMPY_OK and "." not in attr:
+                        yield Finding(
+                            sf.rel,
+                            node.lineno,
+                            self.code,
+                            f"module-level `np.random.{attr}()` uses numpy's "
+                            "hidden global RNG state; thread a seeded "
+                            "Generator through instead",
+                        )
+                elif target.startswith("random."):
+                    yield Finding(
+                        sf.rel,
+                        node.lineno,
+                        self.code,
+                        f"stdlib `{target}()` uses process-global RNG state; "
+                        "decision paths must use a seeded np.random.Generator",
+                    )

@@ -1,0 +1,63 @@
+"""Per-checker scoping: which packages each invariant patrols.
+
+The whitelist is as load-bearing as the ban. `launch/` CLIs (dryrun, train,
+elastic, loadgen, evaluate) legitimately read host wall time — compile-time
+reporting and operator progress lines are *about* wall time — so RPA001
+deliberately excludes them (audited 2026-08: every `time.time`/`perf_counter`
+there feeds a human-facing progress print or a `wall_time_s`-style report
+field, never a scheduling decision). Likewise `serving/clock.py` is the one
+place wall clocks are *supposed* to live: it is the injection boundary.
+
+`repro.models`, `repro.kernels`, `repro.training` use `jax.random` keys (a
+functional, explicitly-seeded API) and are outside RPA002's decision-path
+scope; the ban is on *hidden global state* feeding scheduling decisions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Scope:
+    include: Tuple[str, ...]  # repo-relative path prefixes
+    exclude: Tuple[str, ...] = field(default_factory=tuple)
+
+
+# RPA001 clock hygiene: all timing in the deterministic core must flow
+# through the injectable Clock (serving/clock.py), or ManualClock parity
+# between sim / session / async frontend / router silently breaks.
+CLOCK_SCOPE = Scope(
+    include=(
+        "src/repro/sim/",
+        "src/repro/serving/",
+        "src/repro/policies/",
+        "src/repro/workloads/",
+        "src/repro/core/",
+    ),
+    exclude=("src/repro/serving/clock.py",),  # the injection boundary itself
+)
+
+# RPA002 RNG discipline: decision paths may only draw randomness from an
+# explicitly-seeded Generator that the caller threads through.
+RNG_SCOPE = Scope(
+    include=(
+        "src/repro/sim/",
+        "src/repro/serving/",
+        "src/repro/policies/",
+        "src/repro/workloads/",
+        "src/repro/core/",
+    ),
+)
+
+# RPA003 async safety: only the asyncio-facing modules; everything else is
+# deliberately synchronous.
+ASYNC_SCOPE = Scope(
+    include=(
+        "src/repro/serving/frontend.py",
+        "src/repro/serving/router.py",
+    ),
+)
+
+# RPA004 registry coverage / RPA005 metrics schema: repo-wide over src.
+SRC_SCOPE = Scope(include=("src/repro/",))

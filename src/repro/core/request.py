@@ -38,7 +38,7 @@ class Request:
     input_len: int
     # sim: the true output length; engine: max new tokens
     output_len: int
-    slo: SLOSpec = SLOSpec()
+    slo: SLOSpec = field(default_factory=SLOSpec)
     # multi-tenant serving: who submitted this and which SLO tier it bought.
     # `slo` holds the resolved numeric targets; `slo_class` is the named tier
     # (metrics group by it, admission quotas group by `tenant`).

@@ -1,15 +1,4 @@
-import os
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + " --xla_force_host_platform_device_count=512"
-    ).strip()
-
-# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
-#
-# The two lines above MUST stay first — jax locks the device count on first
-# init, and the production meshes need 512 placeholder host devices.
-_DOC = """
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 Per cell this driver:
   1. builds the model + step function (train_step / prefill_step / serve_step),
@@ -18,22 +7,25 @@ Per cell this driver:
   4. records memory_analysis(), cost_analysis(), parsed collective bytes,
      sharding fallbacks and timings to artifacts/dryrun/<cell>.json.
 
+The production meshes need 512 placeholder host devices; main() calls
+`ensure_host_platform_devices()` before the first device query (jax locks
+the device count on first backend init, not on import).
+
 Usage:
   python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
   python -m repro.launch.dryrun --calibrate
 """
-
-
 import argparse
 import json
+import os
 import time
 import traceback
-from functools import partial
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (
     ALL_SHAPES,
@@ -49,13 +41,12 @@ from repro.dist.sharding import (
     input_pspecs,
     param_pspecs,
 )
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import ensure_host_platform_devices, make_production_mesh
 from repro.models import build_model
 from repro.roofline import hlo_stats
 from repro.roofline.analysis import model_flops_for, parse_collective_bytes
 from repro.training.optimizer import OptimizerConfig, OptState, init_opt_state
 from repro.training.train_step import make_train_step
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
 
@@ -76,7 +67,7 @@ def _ns(mesh, tree):
     )
 
 
-def build_cell(arch: str, shape_name: str, mesh, sharding_mode: str = "train", n_micro: int = None):
+def build_cell(arch: str, shape_name: str, mesh, sharding_mode: str = "train", n_micro: Optional[int] = None):
     """Returns (fn, args_structs, in_shardings, donate, meta)."""
     cfg = get_config(arch)
     spec = ALL_SHAPES[shape_name]
@@ -138,7 +129,7 @@ def build_cell(arch: str, shape_name: str, mesh, sharding_mode: str = "train", n
 
 def run_cell(
     arch: str, shape_name: str, mesh_kind: str, skip_existing: bool = False,
-    sharding_mode: str = "train", tag: str = "", n_micro: int = None,
+    sharding_mode: str = "train", tag: str = "", n_micro: Optional[int] = None,
 ) -> Dict:
     os.makedirs(ARTIFACTS, exist_ok=True)
     cell = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
@@ -232,6 +223,7 @@ def calibrate() -> Dict:
 
 
 def main() -> None:
+    ensure_host_platform_devices()  # before any jax device query initializes the backend
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

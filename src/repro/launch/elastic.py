@@ -1,9 +1,3 @@
-import os
-if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
-    ).strip()
-
 """Elastic re-mesh dry-run: prove the framework recompiles onto a degraded
 device count (node failures at scale) without code changes.
 
@@ -20,11 +14,10 @@ import time
 
 import jax
 
-from repro.configs import ALL_SHAPES, get_config, input_specs
 from repro.dist.act_sharding import use_activation_sharding
 from repro.dist.fault import FleetState, plan_recovery
 from repro.launch import dryrun
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import ensure_host_platform_devices, make_mesh
 
 
 def check(arch: str, shape: str, mesh_shape, axes) -> dict:
@@ -47,6 +40,7 @@ def check(arch: str, shape: str, mesh_shape, axes) -> dict:
 
 
 def main() -> None:
+    ensure_host_platform_devices()  # before any jax device query initializes the backend
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
     ap.add_argument("--shape", default="decode_32k")

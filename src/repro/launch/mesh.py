@@ -6,9 +6,22 @@ functions only. Single pod: 16x16 = 256 chips ('data' x 'model'); multi-pod:
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax
+
+
+def ensure_host_platform_devices(n: int = 512) -> None:
+    """Expose `n` host platform devices to XLA (production-mesh dry-runs on
+    CPU). Must run before jax's backend initializes — i.e. before the first
+    device query, NOT before `import jax` (backends are created lazily), so
+    CLI mains call this as their first statement and module tops stay
+    import-only (ruff E402)."""
+    if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
 
 
 def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]):

@@ -594,16 +594,16 @@ def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     if cfg.family == "ssm":
         s = ssm_mod.ssm_cache_shape(cfg, batch)
         return dict(
-            conv=((cfg.num_layers,) + s["conv"][0], s["conv"][1]),
-            state=((cfg.num_layers,) + s["state"][0], s["state"][1]),
+            conv=((cfg.num_layers, *s["conv"][0]), s["conv"][1]),
+            state=((cfg.num_layers, *s["state"][0]), s["state"][1]),
         )
     if cfg.family == "hybrid":
         ns, per = _hybrid_blocks(cfg)
         s = ssm_mod.ssm_cache_shape(cfg, batch)
         kv = (ns, batch, max_len, cfg.num_kv_heads, hd)
         return dict(
-            conv=((ns, per) + s["conv"][0], s["conv"][1]),
-            state=((ns, per) + s["state"][0], s["state"][1]),
+            conv=((ns, per, *s["conv"][0]), s["conv"][1]),
+            state=((ns, per, *s["state"][0]), s["state"][1]),
             k=(kv, cfg.dtype),
             v=(kv, cfg.dtype),
         )

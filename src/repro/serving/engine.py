@@ -254,7 +254,7 @@ def reference_generate(
     )
     out = [int(np.argmax(np.asarray(logits2[0])))]
     toks = list(prompt) + out
-    for i in range(n_new - 1):
+    for _ in range(n_new - 1):
         if out[-1] == eos or len(toks) >= max_len - 1:
             break
         lg, cache = decode_step(

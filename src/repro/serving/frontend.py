@@ -470,7 +470,8 @@ class AsyncServeSession:
 
     async def _idle(self, dt: float) -> None:
         if self._virtual_clock:
-            self.session.server.clock.sleep(dt)  # advances instantly
+            # repro: allow[RPA003] ManualClock.sleep only advances virtual time
+            self.session.server.clock.sleep(dt)  # returns instantly, never blocks
             await asyncio.sleep(0)  # let clients run at the new time
         else:
             await asyncio.sleep(dt)

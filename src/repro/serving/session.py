@@ -279,7 +279,7 @@ class ServeSession:
             step_t = (clock.monotonic() - t0) * ecfg.time_scale
             tend = srv._now()
             srv.decode_sched.observe([l.req for l in batch], step_t)
-            for lr, tok in zip(batch, toks):
+            for lr, tok in zip(batch, toks, strict=True):
                 r = lr.req
                 tok = int(tok)
                 lr.tokens.append(tok)

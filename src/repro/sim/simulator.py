@@ -69,10 +69,14 @@ class DisaggSimulator:
         cost: CalibratedCostModel = PAPER_COST_MODEL,
         prefill_policy: Union[str, PolicySpec] = "kairos-urgency",
         decode_policy: Union[str, PolicySpec] = "kairos-slack",
-        sim_cfg: SimConfig = SimConfig(),
-        fault_plan: FaultPlan = FaultPlan(),
+        sim_cfg: Optional[SimConfig] = None,
+        fault_plan: Optional[FaultPlan] = None,
         lut: Optional[StepTimeLUT] = None,
     ):
+        if sim_cfg is None:
+            sim_cfg = SimConfig()
+        if fault_plan is None:
+            fault_plan = FaultPlan()
         self.cost = cost
         self.cfg = sim_cfg
         self.faults = sorted(fault_plan.decode_failures)
@@ -300,8 +304,8 @@ def run_policy(
     prefill_policy: Union[str, PolicySpec],
     decode_policy: Union[str, PolicySpec],
     cost: CalibratedCostModel = PAPER_COST_MODEL,
-    sim_cfg: SimConfig = SimConfig(),
-    fault_plan: FaultPlan = FaultPlan(),
+    sim_cfg: Optional[SimConfig] = None,
+    fault_plan: Optional[FaultPlan] = None,
 ) -> SimResult:
     import copy
 

@@ -138,7 +138,7 @@ def _parse_trace_line(path: str, lineno: int, line: str) -> dict:
     return row
 
 
-def load_trace(path: str, qps: Optional[float] = None, slo: SLOSpec = SLOSpec()) -> List[Request]:
+def load_trace(path: str, qps: Optional[float] = None, slo: Optional[SLOSpec] = None) -> List[Request]:
     """Load a JSONL trace; optionally rescale arrivals to a target QPS.
 
     Per-line fields: required ``input_len``/``output_len``; optional
@@ -146,6 +146,8 @@ def load_trace(path: str, qps: Optional[float] = None, slo: SLOSpec = SLOSpec())
     override the ``slo`` default). Malformed lines raise ``ValueError``
     naming the file and line number.
     """
+    if slo is None:
+        slo = SLOSpec()
     rows = []
     with open(path) as f:
         for lineno, line in enumerate(f, start=1):

@@ -65,7 +65,7 @@ class TenantSpec:
 
     name: str
     weight: float = 1.0
-    lengths: LengthDist = LengthDist()
+    lengths: LengthDist = field(default_factory=LengthDist)
     slo_class: str = "standard"
     # fraction of each prompt that is the tenant's shared template (system
     # prompt / few-shot header). 0 = fully unique prompts; > 0 stamps
@@ -81,7 +81,7 @@ class Scenario:
 
     name: str
     n_requests: int = 1000
-    arrivals: ArrivalProcess = PoissonArrivals()
+    arrivals: ArrivalProcess = field(default_factory=PoissonArrivals)
     tenants: Tuple[TenantSpec, ...] = (TenantSpec("default"),)
     slo_classes: Mapping[str, SLOSpec] = field(
         default_factory=lambda: dict(DEFAULT_SLO_CLASSES)

@@ -1,0 +1,456 @@
+"""Mutation-style fixture tests for the `repro.analysis` checker suite.
+
+Each checker gets the same treatment: a fixture mini-repo is seeded with one
+violation of the invariant, and the test asserts the checker catches it *at
+the right line*, that a justified pragma suppresses it, and that a clean
+file yields zero findings — so the static-analysis gate is itself proven to
+detect every violation class it claims to."""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+from typing import Optional
+
+import pytest
+
+from repro.analysis import analyze, load_project, run_checkers
+from repro.analysis.checkers import (
+    ALL_CHECKERS,
+    AsyncSafetyChecker,
+    ClockHygieneChecker,
+    MetricsSchemaChecker,
+    RegistryCoverageChecker,
+    RngDisciplineChecker,
+)
+from repro.analysis.checkers.schema import extract_schema
+from repro.analysis.core import load_source_file
+
+
+def make_repo(tmp_path: Path, files: dict, design: str = "", tests: Optional[dict] = None) -> Path:
+    """Materialize a fixture mini-repo (pyproject marker anchors the root)."""
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='fixture'\n")
+    (tmp_path / "DESIGN.md").write_text(design)
+    for rel, text in {**files, **{f"tests/{k}": v for k, v in (tests or {}).items()}}.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return tmp_path
+
+
+def run_on(tmp_path: Path, files: dict, select=None, **kw):
+    root = make_repo(tmp_path, files, **kw)
+    return analyze([str(root / "src")], select=select, root=root)
+
+
+# ---------------------------------------------------------------- RPA001
+
+
+def test_rpa001_catches_wall_clock_read_at_line(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/bad.py": """\
+            import time
+
+
+            def now():
+                return time.time()
+            """
+        },
+        select=["RPA001"],
+    )
+    assert [(f.code, f.file, f.line) for f in findings] == [
+        ("RPA001", "src/repro/sim/bad.py", 5)
+    ]
+    assert "Clock" in findings[0].message
+
+
+def test_rpa001_sees_through_import_aliases(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/policies/bad.py": """\
+            from time import perf_counter as pc
+
+
+            def cost():
+                return pc()
+            """
+        },
+        select=["RPA001"],
+    )
+    assert len(findings) == 1 and findings[0].line == 5
+
+
+def test_rpa001_whitelists_launch_and_clock_py(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            # launch CLIs legitimately read wall time: out of scope
+            "src/repro/launch/cli.py": "import time\nt = time.time()\n",
+            # the injection boundary itself is excluded
+            "src/repro/serving/clock.py": "import time\nt = time.monotonic()\n",
+        },
+        select=["RPA001"],
+    )
+    assert findings == []
+
+
+def test_rpa001_justified_pragma_suppresses(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/ok.py": """\
+            import time
+
+            t0 = time.perf_counter()  # repro: allow[RPA001] host wall time on purpose
+            """
+        },
+        select=["RPA001", "RPA900"],
+    )
+    assert findings == []
+
+
+def test_unjustified_pragma_does_not_suppress_and_is_flagged(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/sneaky.py": """\
+            import time
+
+            t0 = time.perf_counter()  # repro: allow[RPA001]
+            """
+        },
+        select=["RPA001", "RPA900"],
+    )
+    codes = sorted(f.code for f in findings)
+    assert codes == ["RPA001", "RPA900"]
+
+
+def test_pragma_on_line_above_suppresses(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/ok.py": """\
+            import time
+
+            # repro: allow[RPA001] wall time measured deliberately here
+            t0 = time.perf_counter()
+            """
+        },
+        select=["RPA001", "RPA900"],
+    )
+    assert findings == []
+
+
+def test_clean_file_yields_zero_findings(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/clean.py": """\
+            def f(clock):
+                return clock.monotonic()
+            """
+        },
+        select=["RPA001", "RPA002", "RPA003", "RPA004", "RPA900"],
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------- RPA002
+
+
+def test_rpa002_seedless_default_rng(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/workloads/bad.py": """\
+            import numpy as np
+
+            rng = np.random.default_rng()
+            ok = np.random.default_rng(42)
+            """
+        },
+        select=["RPA002"],
+    )
+    assert [(f.code, f.line) for f in findings] == [("RPA002", 3)]
+    assert "seed" in findings[0].message
+
+
+def test_rpa002_global_numpy_and_stdlib_random(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/bad.py": """\
+            import random
+
+            import numpy as np
+
+            x = np.random.shuffle([1, 2])
+            y = random.randint(0, 3)
+            """
+        },
+        select=["RPA002"],
+    )
+    assert [(f.code, f.line) for f in findings] == [("RPA002", 5), ("RPA002", 6)]
+
+
+def test_rpa002_threaded_generator_is_fine(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/ok.py": """\
+            import numpy as np
+
+
+            def sample(rng: np.random.Generator):
+                return rng.integers(0, 10, 4)
+            """
+        },
+        select=["RPA002"],
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------- RPA003
+
+
+def test_rpa003_blocking_calls_in_async_def(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/serving/frontend.py": """\
+            import asyncio
+            import time
+
+
+            async def stepper(self):
+                time.sleep(0.1)
+                self.server.clock.sleep(0.1)
+                self.session.run([])
+                with open("x") as fh:
+                    pass
+                await asyncio.sleep(0)  # fine
+            """
+        },
+        select=["RPA003"],
+    )
+    assert [f.line for f in findings] == [6, 7, 8, 9]
+    assert all(f.code == "RPA003" for f in findings)
+
+
+def test_rpa003_ignores_sync_defs_and_other_files(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            # nested sync def: defined in the coroutine, runs elsewhere
+            "src/repro/serving/router.py": """\
+            import time
+
+
+            async def outer():
+                def helper():
+                    time.sleep(1)
+                return helper
+            """,
+            # same blocking call in a module RPA003 does not patrol
+            "src/repro/serving/engine.py": """\
+            import time
+
+
+            async def f():
+                time.sleep(1)
+            """,
+        },
+        select=["RPA003"],
+    )
+    assert findings == []
+
+
+# ---------------------------------------------------------------- RPA004
+
+
+_POLICY = """\
+from repro.policies.registry import register_prefill, register_decode
+
+
+@register_prefill("zzz-pol")
+class P:
+    pass
+
+
+register_decode("yyy-dec", flag=True)(P)
+"""
+
+
+def test_rpa004_clean_when_tested_and_documented(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {"src/repro/policies/p.py": _POLICY},
+        design="| `zzz-pol` | x |\n| `yyy-dec` | y |\n",
+        tests={"test_p.py": "NAMES = ['zzz-pol', 'yyy-dec']\n"},
+        select=["RPA004"],
+    )
+    assert findings == []
+
+
+def test_rpa004_flags_untested_and_undocumented_at_registration_line(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {"src/repro/policies/p.py": _POLICY},
+        design="only `zzz-pol` documented\n",
+        tests={"test_p.py": "run('zzz-pol')\n"},
+        select=["RPA004"],
+    )
+    # yyy-dec (direct factory-call form, line 9): untested AND undocumented
+    assert [f.line for f in findings] == [9, 9]
+    assert any("tests/" in f.message for f in findings)
+    assert any("DESIGN.md" in f.message for f in findings)
+
+
+def test_rpa004_substring_match_does_not_count(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/policies/p.py": """\
+            from repro.policies.registry import register_decode
+
+
+            @register_decode("kai-slack")
+            class D:
+                pass
+            """
+        },
+        # mentions only the -greedy variant; must NOT cover "kai-slack"
+        design="`kai-slack-greedy` is documented\n",
+        tests={"test_d.py": "make('kai-slack-greedy')\n"},
+        select=["RPA004"],
+    )
+    assert len(findings) == 2  # untested + undocumented
+
+
+# ---------------------------------------------------------------- RPA005
+
+
+_SESSION = """\
+class ServeSession:
+    def summary(self):
+        agg = dict(alpha=1, beta=2)
+        out = dict(gamma=3, **agg)
+        out["delta"] = 4
+        out.update(epsilon=5)
+        return out
+"""
+
+
+def _schema_checker(rel_schema: str):
+    chk = MetricsSchemaChecker()
+    chk.schema_rel = rel_schema
+    chk.specs = (
+        ("s.summary", "src/repro/serving/session.py", ("ServeSession", "summary"), "keys"),
+    )
+    return chk
+
+
+def test_rpa005_fingerprint_covers_dict_update_subscript_and_star_kwargs(tmp_path):
+    root = make_repo(tmp_path, {"src/repro/serving/session.py": _SESSION})
+    project = load_project([root / "src"], root=root)
+    chk = _schema_checker("schema.json")
+    schema = extract_schema(project, chk.specs)
+    assert schema["entries"]["s.summary"] == ["alpha", "beta", "delta", "epsilon", "gamma"]
+
+
+def test_rpa005_drift_is_flagged_both_directions(tmp_path):
+    import json
+
+    root = make_repo(tmp_path, {"src/repro/serving/session.py": _SESSION})
+    chk = _schema_checker("schema.json")
+    committed = dict(
+        version=1,
+        entries={"s.summary": ["alpha", "beta", "delta", "gamma", "vanished"]},
+    )
+    (root / "schema.json").write_text(json.dumps(committed))
+    project = load_project([root / "src"], root=root)
+    findings = run_checkers(project, [chk], select=["RPA005"])
+    msgs = [f.message for f in findings]
+    assert len(findings) == 2
+    assert any("'epsilon'" in m and "not in the committed schema" in m for m in msgs)
+    assert any("'vanished'" in m and "no longer emits" in m for m in msgs)
+    assert all(f.line == 2 for f in findings)  # anchored at the summary() def
+
+
+def test_rpa005_missing_schema_file_is_one_finding(tmp_path):
+    root = make_repo(tmp_path, {"src/repro/serving/session.py": _SESSION})
+    project = load_project([root / "src"], root=root)
+    findings = run_checkers(project, [_schema_checker("nope.json")], select=["RPA005"])
+    assert len(findings) == 1 and "--write-schema" in findings[0].message
+
+
+def test_rpa005_matching_schema_is_clean(tmp_path):
+    import json
+
+    root = make_repo(tmp_path, {"src/repro/serving/session.py": _SESSION})
+    chk = _schema_checker("schema.json")
+    project = load_project([root / "src"], root=root)
+    (root / "schema.json").write_text(json.dumps(extract_schema(project, chk.specs)))
+    assert run_checkers(project, [chk], select=["RPA005"]) == []
+
+
+# ------------------------------------------------------- framework behavior
+
+
+def test_syntax_error_degrades_to_rpa000_and_run_continues(tmp_path):
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/broken.py": "def f(:\n    pass\n",
+            "src/repro/sim/bad.py": "import time\nt = time.time()\n",
+        },
+        select=["RPA000", "RPA001"],
+    )
+    codes = {f.code for f in findings}
+    assert "RPA000" in codes  # broken file reported with its location...
+    assert "RPA001" in codes  # ...and the healthy file was still checked
+    rpa000 = next(f for f in findings if f.code == "RPA000")
+    assert rpa000.file == "src/repro/sim/broken.py" and rpa000.line == 1
+
+
+def test_select_filters_checkers(tmp_path):
+    files = {
+        "src/repro/sim/bad.py": "import time\nimport random\nt = time.time()\nr = random.random()\n"
+    }
+    only_clock = run_on(tmp_path, dict(files), select=["RPA001"])
+    assert {f.code for f in only_clock} == {"RPA001"}
+    both = run_on(tmp_path, dict(files), select=["RPA001", "RPA002"])
+    assert {f.code for f in both} == {"RPA001", "RPA002"}
+
+
+def test_pragma_requires_exact_code(tmp_path):
+    # an RPA002 pragma must not silence an RPA001 finding on the same line
+    findings = run_on(
+        tmp_path,
+        {
+            "src/repro/sim/bad.py": """\
+            import time
+
+            t0 = time.time()  # repro: allow[RPA002] wrong code entirely
+            """
+        },
+        select=["RPA001"],
+    )
+    assert [f.code for f in findings] == ["RPA001"]
+
+
+def test_all_checkers_have_unique_codes_and_descriptions():
+    codes = [cls.code for cls in ALL_CHECKERS]
+    assert len(codes) == len(set(codes)) == 5
+    assert all(cls.description for cls in ALL_CHECKERS)
+
+
+def test_load_source_file_parses_pragma_lists(tmp_path):
+    p = tmp_path / "x.py"
+    p.write_text("a = 1  # repro: allow[RPA001,RPA002] two codes, one reason\n")
+    sf = load_source_file(p, tmp_path)
+    assert sf.allows("RPA001", 1) and sf.allows("RPA002", 1)
+    assert sf.allows("RPA001", 2)  # next line covered too
+    assert not sf.allows("RPA003", 1)

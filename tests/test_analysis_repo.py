@@ -1,0 +1,99 @@
+"""Repo-wide static-analysis gate: the committed tree must be clean.
+
+This is the same contract the `static-analysis` CI job enforces — running
+it as a tier-1 test means a violation fails the suite locally before CI
+ever sees it."""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import analyze
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_committed_tree_is_clean():
+    findings = analyze([str(REPO_ROOT / "src")], root=REPO_ROOT)
+    assert findings == [], "unsuppressed findings:\n" + "\n".join(map(str, findings))
+
+
+def test_cli_exits_zero_on_committed_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "--format", "json"],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["count"] == 0 and report["findings"] == []
+
+
+def test_cli_exits_nonzero_on_violation(tmp_path):
+    # a real violation through the real CLI: exit 1 + a parsable finding
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='fixture'\n")
+    bad = tmp_path / "src" / "repro" / "sim" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.monotonic()\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(tmp_path / "src"),
+         "--select", "RPA001", "--format", "json"],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    report = json.loads(proc.stdout)
+    assert report["count"] == 1
+    assert report["findings"][0]["code"] == "RPA001"
+    assert report["findings"][0]["line"] == 2
+
+
+def test_cli_degrades_gracefully_on_unparseable_file(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='fixture'\n")
+    bad = tmp_path / "src" / "repro" / "sim" / "broken.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("def f(:\n    pass\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(tmp_path / "src"),
+         "--select", "RPA000,RPA001", "--format", "json"],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr  # reported, not crashed
+    report = json.loads(proc.stdout)
+    assert [f["code"] for f in report["findings"]] == ["RPA000"]
+    assert report["findings"][0]["file"].endswith("broken.py")
+
+
+def test_cli_list_names_all_checkers():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list"],
+        cwd=REPO_ROOT,
+        capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0
+    for code in ("RPA001", "RPA002", "RPA003", "RPA004", "RPA005"):
+        assert code in proc.stdout
+
+
+def test_committed_metrics_schema_matches_tree():
+    """--write-schema must be a no-op on the committed tree (the RPA005
+    clean check above implies this; asserting directly gives a sharper
+    failure when only the schema file is stale)."""
+    from repro.analysis import load_project
+    from repro.analysis.checkers.schema import SCHEMA_REL, extract_schema
+
+    project = load_project([REPO_ROOT / "src"], root=REPO_ROOT)
+    current = extract_schema(project)
+    committed = json.loads((REPO_ROOT / SCHEMA_REL).read_text())
+    assert current == committed

@@ -77,7 +77,7 @@ def test_async_sync_parity_on_manual_clock(tiny_model):
     outs_async = asyncio.run(run_async())
 
     assert outs_sync == outs_async
-    for (rs, _), (ra, _) in zip(reqs_sync, reqs_async):
+    for (rs, _), (ra, _) in zip(reqs_sync, reqs_async, strict=True):
         assert rs.phase == ra.phase == Phase.DONE
         # exact equality, not approx: both sides read the same virtual clock
         # in the same order, so any drift is a frontend scheduling bug
@@ -112,7 +112,7 @@ def test_streaming_token_order_and_ttft_timestamps(tiny_model):
         assert r.phase == Phase.DONE
         assert r.first_token_time == r.token_times[0]
         assert r.ttft() == r.first_token_time - r.arrival
-        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:], strict=False))
 
 
 # --------------------------------------------------------- backpressure
@@ -312,7 +312,7 @@ def test_async_admission_shed_is_failed_not_cancelled(tiny_model):
 
     frontend, verdicts, outs = asyncio.run(run())
     assert verdicts.count(False) >= 1
-    for (r, _), ok, out in zip(pairs, verdicts, outs):
+    for (r, _), ok, out in zip(pairs, verdicts, outs, strict=True):
         if ok:
             assert r.phase == Phase.DONE and out == frontend.session.outputs[r.rid]
         else:

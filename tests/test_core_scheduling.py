@@ -90,7 +90,7 @@ def test_urgency_negative_slack_inversion_documented():
     # the long request makes everyone's FCFS-predicted slack negative
     long_r = mk_req(0, 0.0, 100_000, ttft=8.0)
     shorts = [mk_req(i, 0.01 * i, 500, ttft=8.0) for i in range(1, 4)]
-    queue = [long_r] + shorts
+    queue = [long_r, *shorts]
     sched = UrgencyPrefillScheduler()
     scores = sched.urgency_scores(queue, 0.5, mu)
     assert np.all(scores < 0)
@@ -131,7 +131,7 @@ def test_slack_packs_shorts_and_delays_straggler():
     t = 10.0
     shorts = [active_req(i, 2000, 10, t - 0.2) for i in range(20)]  # big bank
     straggler = active_req(99, 131_072, 10, t - 0.2)
-    batch, delayed = sched.select(shorts + [straggler], t)
+    batch, delayed = sched.select([*shorts, straggler], t)
     assert straggler not in batch
     assert len(batch) >= 10
 
@@ -203,8 +203,8 @@ def test_pacer_paced_monotone_and_slo_safe():
     p = DeliveryPacer(mode="paced", pace_fraction=0.9)
     gen = [1.0, 1.001, 1.002, 1.003, 2.0]
     out = p.delivery_times(gen, 1.0, 0.05)
-    assert all(b >= a for a, b in zip(out, out[1:]))
-    assert all(d >= g for d, g in zip(out, gen))
+    assert all(b >= a for a, b in zip(out, out[1:], strict=False))
+    assert all(d >= g for d, g in zip(out, gen, strict=True))
     # mean ITL within the SLO
     itl = (out[-1] - out[0]) / (len(out) - 1)
     assert itl <= 0.05 * 5  # loose: late generation dominates

@@ -19,7 +19,7 @@ SLO = SLOSpec(ttft=8.0, tpot=0.05)
 
 def _queue(arrivals, lens):
     out = []
-    for i, (a, l) in enumerate(zip(arrivals, lens)):
+    for i, (a, l) in enumerate(zip(arrivals, lens, strict=True)):
         out.append(Request(rid=i, arrival=float(a), input_len=int(l), output_len=10, slo=SLO))
     return out
 

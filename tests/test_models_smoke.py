@@ -60,7 +60,7 @@ def test_smoke_prefill_and_decode(arch):
     assert lg.shape == (2, cfg.vocab_size)
     assert bool(jnp.isfinite(lg).all())
     # cache leaves keep shape/dtype
-    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2)):
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(cache2), strict=True):
         assert a.shape == b.shape and a.dtype == b.dtype
 
 

@@ -45,7 +45,7 @@ def _worker() -> None:
     assert len(flat_struct) == len(flat_specs)
     model_sharded = [
         (leaf, spec)
-        for leaf, spec in zip(flat_struct, flat_specs)
+        for leaf, spec in zip(flat_struct, flat_specs, strict=True)
         if "model" in tuple(spec)
     ]
 

@@ -72,9 +72,9 @@ def test_prefix_trie_match_and_accounting():
     pc = PrefixCache(block=4)
     assert pc.admit(list(range(12))) == (0, 12)  # cold: 3 blocks inserted
     # same 8-token head, new tail: 2 blocks hit, third diverges
-    assert pc.admit(list(range(8)) + [99, 98, 97, 96]) == (8, 12)
+    assert pc.admit([*range(8), 99, 98, 97, 96]) == (8, 12)
     assert pc.match(list(range(12))) == 12
-    assert pc.match(list(range(8)) + [1, 1, 1, 1]) == 8
+    assert pc.match([*range(8), 1, 1, 1, 1]) == 8
     assert pc.match([7] * 12) == 0
     # partial final block never matches (only full blocks are keyed)
     assert pc.match(list(range(6))) == 4
@@ -193,8 +193,8 @@ def test_session_prefix_admission_accounting_and_credit(tiny_model):
                        slo=SLOSpec(ttft=120.0, tpot=10.0))
 
     r0, r1 = req(0, 10), req(1, 10)
-    assert sess.submit(r0, shared + [50, 51])
-    assert sess.submit(r1, shared + [60, 61])
+    assert sess.submit(r0, [*shared, 50, 51])
+    assert sess.submit(r1, [*shared, 60, 61])
     assert r0.prefix_hit_tokens == 0
     assert r1.prefix_hit_tokens == 8  # two shared full blocks
     m = sess.metrics
@@ -292,7 +292,7 @@ def test_cross_replica_cancel_reclaims_owning_replica_only(tiny_model):
     own, other = router.replicas[0].frontend.session, router.replicas[1].frontend.session
     assert own.metrics.cancelled == 1 and other.metrics.cancelled == 0
     assert other.metrics.completed == 1
-    for sess, srv in zip((own, other), servers):
+    for sess, srv in zip((own, other), servers, strict=True):
         assert sess.queue == [] and sess.waiting_adm == [] and sess.active == []
         assert srv.decode.alloc.live_tokens == {}
     assert len(router.outputs[r1.rid]) == r1.n_generated
@@ -367,7 +367,7 @@ def test_single_replica_router_is_bit_identical_to_frontend(tiny_model):
     outs_direct = asyncio.run(run_direct())
     outs_routed = asyncio.run(run_routed())
     assert outs_direct == outs_routed
-    for (rd, _), (rr, _) in zip(pairs_direct, pairs_routed):
+    for (rd, _), (rr, _) in zip(pairs_direct, pairs_routed, strict=True):
         assert rd.phase == rr.phase == Phase.DONE
         # exact equality: same virtual clock reads in the same order
         assert rd.ttft() == rr.ttft()

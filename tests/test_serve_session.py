@@ -70,13 +70,13 @@ def test_online_arrivals_with_admission_shedding(tiny_model):
     s = session.summary()
     assert s["submitted"] == 5
     assert s["rejected"] == accepted.count(False)
-    assert s["rejected_rids"] == [r.rid for (r, _), ok in zip(reqs, accepted) if not ok]
+    assert s["rejected_rids"] == [r.rid for (r, _), ok in zip(reqs, accepted, strict=True) if not ok]
     assert s["completed"] == s["accepted"]
-    for (r, _), ok in zip(reqs, accepted):
+    for (r, _), ok in zip(reqs, accepted, strict=True):
         assert r.phase == (Phase.DONE if ok else Phase.FAILED)
     # shed requests are visible in per-request metrics with null latencies
     per = {d["rid"]: d for d in s["requests"]}
-    for (r, _), ok in zip(reqs, accepted):
+    for (r, _), ok in zip(reqs, accepted, strict=True):
         if not ok:
             assert per[r.rid]["phase"] == "failed"
             assert per[r.rid]["ttft"] is None
@@ -106,7 +106,7 @@ def test_on_token_callbacks_stream_every_token(tiny_model):
     assert streamed == session.outputs
     # token timestamps are monotone per request
     for r, _ in reqs:
-        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:], strict=False))
 
 
 def test_serve_is_a_thin_loop_over_the_session(tiny_model):
@@ -126,7 +126,7 @@ def test_serve_is_a_thin_loop_over_the_session(tiny_model):
         session.step()
 
     assert outs_a == session.outputs
-    for (ra, _), (rb, _) in zip(reqs_a, reqs_b):
+    for (ra, _), (rb, _) in zip(reqs_a, reqs_b, strict=True):
         assert ra.phase == rb.phase == Phase.DONE
         assert ra.n_generated == rb.n_generated
 

@@ -42,7 +42,7 @@ def test_param_pspecs_respect_divisibility():
     flat_s, _ = jax.tree_util.tree_flatten(struct)
     flat_p = _leaf_specs(specs)
     assert len(flat_s) == len(flat_p)
-    for leaf, spec in zip(flat_s, flat_p):
+    for leaf, spec in zip(flat_s, flat_p, strict=True):
         assert len(spec) <= len(leaf.shape)
 
 
@@ -140,7 +140,7 @@ def test_training_resume_is_bit_deterministic(tmp_path):
     ck.save(3, {"params": pB, "opt": oB})
     restored, step = ck.restore({"params": pB, "opt": oB})
     pC, oC, mC = run(restored["params"], restored["opt"], step, 3)
-    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pC)):
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pC), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert float(mA["loss"]) == pytest.approx(float(mC["loss"]), abs=0)
 
@@ -179,7 +179,7 @@ def test_microbatch_grad_accum_matches_full_batch():
     l4, g4 = loss_and_grad_accum(model, params, batch, n_micro=4)
     # per-microbatch token counts are equal here, so means match
     assert float(l1) == pytest.approx(float(l4), rel=1e-5)
-    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4), strict=True):
         np.testing.assert_allclose(
             np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-4, atol=2e-5
         )

@@ -39,7 +39,7 @@ def test_all_requests_complete_and_metrics_consistent():
         assert r.n_generated == r.output_len
         assert r.first_token_time is not None and r.done_time is not None
         assert len(r.token_times) == r.n_generated
-        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:], strict=False))
     s = summarize(res)
     for k in ("ttft", "tpot", "e2e"):
         assert 0.0 <= s[k] <= 1.0
@@ -92,7 +92,7 @@ def test_scheduler_does_not_change_token_counts():
     for runner in (run_kairos, run_distserve, run_kairos_plus):
         res = runner(reqs)
         for orig, r in zip(sorted(reqs, key=lambda x: x.rid),
-                           sorted(res.requests, key=lambda x: x.rid)):
+                           sorted(res.requests, key=lambda x: x.rid), strict=True):
             assert r.n_generated == orig.output_len
 
 

@@ -16,7 +16,7 @@ def test_trace_invariants(seed, qps):
     reqs = generate_trace(cfg)
     assert len(reqs) == 50
     arr = [r.arrival for r in reqs]
-    assert all(b >= a for a, b in zip(arr, arr[1:]))  # sorted arrivals
+    assert all(b >= a for a, b in zip(arr, arr[1:], strict=False))  # sorted arrivals
     for r in reqs:
         assert cfg.min_input <= r.input_len <= cfg.max_input
         assert cfg.min_output <= r.output_len <= cfg.max_output
@@ -45,8 +45,8 @@ def test_pacer_properties(times, tpot):
     out = p.delivery_times(times, times[0], tpot)
     assert len(out) == len(times)
     # delivery never precedes generation and is monotone
-    assert all(d >= g for d, g in zip(out, times))
-    assert all(b >= a for a, b in zip(out, out[1:]))
+    assert all(d >= g for d, g in zip(out, times, strict=True))
+    assert all(b >= a for a, b in zip(out, out[1:], strict=False))
     # immediate mode is the identity
     assert DeliveryPacer(mode="immediate").delivery_times(times, times[0], tpot) == times
 

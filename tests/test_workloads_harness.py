@@ -64,7 +64,7 @@ def test_engine_scale_mapping_preserves_labels_and_budget(engine_bundle):
     pairs = to_engine_requests(reqs, hcfg, engine_bundle.cfg.vocab_size,
                                np.random.default_rng(0))
     assert len(pairs) == len(reqs)
-    for orig, (twin, prompt) in zip(reqs, pairs):
+    for orig, (twin, prompt) in zip(reqs, pairs, strict=True):
         assert twin.input_len == len(prompt)
         assert 2 <= twin.input_len <= hcfg.engine_max_prompt
         assert 1 <= twin.output_len <= hcfg.engine_max_output

@@ -52,7 +52,7 @@ def test_every_registered_scenario_generates_a_valid_trace(replay_path):
         reqs = make_scenario(name, **_kwargs_for(name, replay_path)).generate(seed=0)
         assert len(reqs) > 0, name
         arrivals = [r.arrival for r in reqs]
-        assert all(b >= a for a, b in zip(arrivals, arrivals[1:])), name
+        assert all(b >= a for a, b in zip(arrivals, arrivals[1:], strict=False)), name
         for r in reqs:
             assert isinstance(r, Request)
             assert r.arrival >= 0.0
@@ -158,7 +158,7 @@ def test_save_load_trace_round_trip_preserves_tenant_fields(tmp_path):
     save_trace(str(p), reqs)
     back = load_trace(str(p))
     assert len(back) == len(reqs)
-    for a, b in zip(reqs, back):
+    for a, b in zip(reqs, back, strict=True):
         assert (a.arrival, a.input_len, a.output_len) == (b.arrival, b.input_len, b.output_len)
         assert (a.tenant, a.slo_class) == (b.tenant, b.slo_class)
         assert (a.slo.ttft, a.slo.tpot) == (b.slo.ttft, b.slo.tpot)

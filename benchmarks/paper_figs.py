@@ -131,6 +131,27 @@ def _router_grid() -> Dict:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _disagg_grid() -> Dict:
+    """Disaggregated-fleet slice: a 2P:2D pool split with load-aware
+    prefill deflection on the heavy-head scenario (the prompt mix the
+    deflection watermark is aimed at). Live engine compute, sized like the
+    router slice — the gate tracks decode throughput with the KV-handoff
+    stage on the path."""
+    from repro.workloads.harness import HarnessConfig, run_grid
+
+    return run_grid(
+        scenarios=["heavy-head"],
+        prefills=["kairos-urgency"],
+        decodes=["kairos-slack"],
+        backends=["disagg"],
+        hcfg=HarnessConfig(
+            n_requests=24, seed=SEED, disagg_prefill=2, disagg_decode=2,
+            deflect_policy="prefill-pressure",
+        ),
+    )
+
+
 def _record_cell(c: Dict) -> Dict:
     row = dict(
         scenario=c["scenario"],
@@ -147,23 +168,44 @@ def _record_cell(c: Dict) -> Dict:
         row["router_policy"] = c["router"]["policy"]
         row["router_replicas"] = c["router"]["replicas"]
         row["prefix_hit_rate"] = c["router"]["prefix"]["hit_rate"]
+    if "disagg" in c:
+        d = c["disagg"]
+        row["pools"] = f"{d['pools']['prefill']}:{d['pools']['decode']}"
+        row["deflect_policy"] = d["deflect"]
+        row["deflected"] = d["deflection"]["deflected"]
+        row["transfers_completed"] = d["handoff"]["transfers_completed"]
+        row["local_transfers"] = d["handoff"]["local_transfers"]
     return row
 
 
 def workloads_bench_record() -> Dict:
     """Perf record for BENCH_workloads.json: wall time + decode throughput
-    per cell of the scenario matrix, plus the routed-fleet cells (matched
-    by the gate on scenario/prefill/decode/backend like any other)."""
+    per cell of the scenario matrix, plus the routed-fleet and
+    disaggregated-fleet cells (matched by the gate on
+    scenario/prefill/decode/backend like any other)."""
     grid = _workload_grid()
     router = _router_grid()
-    cells = list(grid["cells"]) + list(router["cells"])
+    disagg = _disagg_grid()
+    cells = list(grid["cells"]) + list(router["cells"]) + list(disagg["cells"])
     g = dict(grid["grid"])
-    g["backends"] = list(g["backends"]) + list(router["grid"]["backends"])
+    g["backends"] = (
+        list(g["backends"])
+        + list(router["grid"]["backends"])
+        + list(disagg["grid"]["backends"])
+    )
     g["router"] = dict(
         scenarios=router["grid"]["scenarios"],
         policy=router["config"]["router_policy"],
         replicas=router["config"]["router_replicas"],
         n_requests=router["config"]["n_requests"],
+    )
+    g["disagg"] = dict(
+        scenarios=disagg["grid"]["scenarios"],
+        pools="%d:%d" % (
+            disagg["config"]["disagg_prefill"], disagg["config"]["disagg_decode"]
+        ),
+        deflect=disagg["config"]["deflect_policy"],
+        n_requests=disagg["config"]["n_requests"],
     )
     return dict(
         grid=g,

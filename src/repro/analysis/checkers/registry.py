@@ -29,6 +29,7 @@ REGISTER_FUNCS = (
     "register_prefill",
     "register_decode",
     "register_router",
+    "register_deflection",
     "register_scenario",
 )
 

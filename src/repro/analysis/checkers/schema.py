@@ -36,11 +36,15 @@ SPECS: Tuple[Tuple[str, str, Tuple[str, ...], str], ...] = (
     ("serving.ServeSession.summary", "src/repro/serving/session.py", ("ServeSession", "summary"), "keys"),
     ("serving.RouterSession.summary", "src/repro/serving/router.py", ("RouterSession", "summary"), "keys"),
     ("serving.RouterSession.prefix_summary", "src/repro/serving/router.py", ("RouterSession", "prefix_summary"), "keys"),
+    ("serving.HandoffMetrics", "src/repro/serving/disagg.py", ("HandoffMetrics",), "fields"),
+    ("serving.DisaggSession.summary", "src/repro/serving/disagg.py", ("DisaggSession", "summary"), "keys"),
+    ("serving.DisaggSession.handoff_summary", "src/repro/serving/disagg.py", ("DisaggSession", "handoff_summary"), "keys"),
     ("sim.Attainment", "src/repro/sim/metrics.py", ("Attainment",), "fields"),
     ("sim.summarize", "src/repro/sim/metrics.py", ("summarize",), "keys"),
     ("workloads.cell_report", "src/repro/workloads/harness.py", ("_cell_report",), "keys"),
     ("workloads.evaluate_cell", "src/repro/workloads/harness.py", ("evaluate_cell",), "keys"),
     ("workloads.router_cell_block", "src/repro/workloads/harness.py", ("router_cell_block",), "keys"),
+    ("workloads.disagg_cell_block", "src/repro/workloads/harness.py", ("disagg_cell_block",), "keys"),
 )
 
 

@@ -10,10 +10,12 @@ total and per-tenant/per-class attainment, goodput, shed/cancelled counts)
 to stdout or ``--out``. All four backends — ``sim``, ``engine``,
 ``async-engine`` (the `AsyncServeSession` frontend with concurrent stream
 consumers; see `repro.launch.loadgen` for the dedicated open-loop driver),
-and ``router`` (``--replicas`` frontends behind a `RouterSession`, placement
-by ``--router``, per-replica breakdown in the cell's ``router`` block) —
-share the report schema; ``--list-scenarios`` / ``--list-policies`` print
-the registries.
+``router`` (``--replicas`` frontends behind a `RouterSession`, placement by
+``--router``, per-replica breakdown in the cell's ``router`` block), and
+``disagg`` (a ``--pools P:D`` prefill/decode split with KV handoff and
+``--deflect`` prefill deflection; handoff/deflection/per-pool-attainment in
+the cell's ``disagg`` block) — share the report schema;
+``--list-scenarios`` / ``--list-policies`` print the registries.
 """
 from __future__ import annotations
 
@@ -22,8 +24,12 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.policies import available_policies, available_router_policies
-from repro.workloads.harness import BACKENDS, HarnessConfig, run_grid
+from repro.policies import (
+    available_deflection_policies,
+    available_policies,
+    available_router_policies,
+)
+from repro.workloads.harness import BACKENDS, HarnessConfig, parse_pools, run_grid
 from repro.workloads.scenarios import available_scenarios
 
 
@@ -89,6 +95,23 @@ def build_parser() -> argparse.ArgumentParser:
         "--router", default="least-queued", choices=available_router_policies(),
         help="router backend: routing policy from the repro.policies registry",
     )
+    ap.add_argument(
+        "--pools", default="2:2", type=parse_pools, metavar="P:D",
+        help="disagg backend: prefill:decode pool sizes (e.g. 2:2)",
+    )
+    ap.add_argument(
+        "--deflect", default="never", choices=available_deflection_policies(),
+        help="disagg backend: prefill-deflection policy from the registry",
+    )
+    ap.add_argument(
+        "--transfer-bw", type=float, default=900e9,
+        help="KV handoff bandwidth in bytes/sec (engine admission + disagg "
+        "cross-server transfers, priced via CostModel.transfer_time)",
+    )
+    ap.add_argument(
+        "--transfer-lat", type=float, default=0.002,
+        help="KV handoff fixed latency in virtual seconds",
+    )
     ap.add_argument("--out", default=None, help="write the JSON report here (default stdout)")
     ap.add_argument("--list-scenarios", action="store_true")
     ap.add_argument("--list-policies", action="store_true")
@@ -124,6 +147,11 @@ def main(argv: Optional[List[str]] = None) -> dict:
         backpressure=args.backpressure,
         router_replicas=args.replicas,
         router_policy=args.router,
+        disagg_prefill=args.pools[0],
+        disagg_decode=args.pools[1],
+        deflect_policy=args.deflect,
+        transfer_bw=args.transfer_bw,
+        transfer_lat=args.transfer_lat,
     )
     report = run_grid(
         scenarios=args.scenario,

@@ -26,6 +26,12 @@ instead of a single frontend: N replica engines, placement by a registered
 routing policy (round-robin / least-queued / slack-aware / prefix-affinity),
 and a ``router`` block in the cell with per-replica request counts and
 prefix-cache hit rates.
+
+``--pools P:D`` serves through a disaggregated `DisaggFleetSession` instead:
+P prefill + D decode servers on one shared clock, cross-pool KV handoff
+priced by the calibrated cost model, prefill deflection by ``--deflect``,
+and the same ``disagg`` cell block ``launch/evaluate.py`` emits (handoff and
+deflection records, per-pool attainment).
 """
 from __future__ import annotations
 
@@ -35,14 +41,20 @@ import dataclasses
 import json
 import sys
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
-from repro.policies import available_policies, available_router_policies
+from repro.policies import (
+    available_deflection_policies,
+    available_policies,
+    available_router_policies,
+)
 from repro.workloads.harness import (
     HarnessConfig,
     _cell_report,
     _EngineBundle,
     _engine_setup,
+    disagg_cell_block,
+    parse_pools,
     router_cell_block,
 )
 from repro.workloads.scenarios import available_scenarios, make_scenario
@@ -57,38 +69,56 @@ def run_loadgen(
     scenario_kwargs: Optional[Dict] = None,
     servers: int = 1,
     router: Optional[str] = None,
+    pools: Optional[Tuple[int, int]] = None,
 ) -> Dict:
     """One open-loop cell wrapped in the evaluate.py schema: a single
-    ``async-engine`` frontend by default, or — with ``servers > 1`` or an
-    explicit ``router`` policy — a routed fleet (`RouterSession`) whose
-    cell adds the per-replica ``router`` block."""
+    ``async-engine`` frontend by default, a routed fleet (`RouterSession`,
+    per-replica ``router`` block) with ``servers > 1`` or an explicit
+    ``router`` policy, or a disaggregated P:D fleet (`DisaggFleetSession`,
+    ``disagg`` block) with ``pools``."""
     from repro.serving.clock import MonotonicClock
+    from repro.serving.disagg import DisaggFleetSession
     from repro.serving.frontend import AsyncServeSession
     from repro.serving.router import RouterSession
 
     routed = servers > 1 or router is not None
+    disagg = pools is not None
+    if routed and disagg:
+        raise ValueError("--pools (disagg) and --servers/--router are exclusive")
     if routed:
         hcfg = dataclasses.replace(
             hcfg,
             router_replicas=max(1, servers),
             router_policy=router or hcfg.router_policy,
         )
+    if disagg:
+        hcfg = dataclasses.replace(
+            hcfg, disagg_prefill=pools[0], disagg_decode=pools[1]
+        )
     kwargs = dict(scenario_kwargs or {})
     if hcfg.n_requests is not None:
         kwargs.setdefault("n_requests", hcfg.n_requests)
     reqs = make_scenario(scenario, **kwargs).generate(hcfg.seed)
+    n_servers = 1
+    if routed:
+        n_servers = hcfg.router_replicas
+    elif disagg:
+        n_servers = hcfg.disagg_prefill + hcfg.disagg_decode
     fleet, pairs = _engine_setup(
         reqs, prefill, decode, hcfg, _EngineBundle(hcfg.engine_arch),
-        n_servers=hcfg.router_replicas if routed else 1,
+        n_servers=n_servers, shared_clock=disagg,
     )
     if realtime:
+        # the disagg fleet must keep sharing ONE clock instance even on the
+        # wall clock — per-server clocks fail _FleetClock's validation
+        wall_clock = MonotonicClock()
         for srv in fleet:
-            srv.clock = MonotonicClock()
+            srv.clock = wall_clock if disagg else MonotonicClock()
     clients = max(1, hcfg.async_clients)
 
     async def _serve():
-        # the open-loop drive is (Async|Router)Session.replay — the same
-        # code paths as the harness's async-engine/router backends — with a
+        # the open-loop drive is (Async|Router|DisaggFleet)Session.replay —
+        # the same code paths as the harness's engine backends — with a
         # hook for the per-client accounting this report adds
         counts = [0] * clients
         on_tok = lambda c, _tok: counts.__setitem__(c, counts[c] + 1)
@@ -100,6 +130,15 @@ def run_loadgen(
                 backpressure=hcfg.backpressure,
                 prefix_block=hcfg.prefix_block,
                 prefix_cache_blocks=hcfg.prefix_cache_blocks,
+            )
+        elif disagg:
+            session = DisaggFleetSession(
+                fleet[: hcfg.disagg_prefill],
+                fleet[hcfg.disagg_prefill :],
+                deflection=hcfg.deflect_policy,
+                stream_buffer=hcfg.stream_buffer,
+                backpressure=hcfg.backpressure,
+                max_inflight_transfers=hcfg.max_inflight_transfers,
             )
         else:
             session = AsyncServeSession(
@@ -115,7 +154,7 @@ def run_loadgen(
     tokens_by_client, session = asyncio.run(_serve())
     wall = time.perf_counter() - t0
 
-    backend = "router" if routed else "async-engine"
+    backend = "router" if routed else ("disagg" if disagg else "async-engine")
     cell = dict(
         scenario=scenario,
         prefill=prefill,
@@ -133,6 +172,8 @@ def run_loadgen(
     )
     if routed:
         cell["router"] = router_cell_block(session.summary())
+    if disagg:
+        cell["disagg"] = disagg_cell_block(session.core, [r for r, _ in pairs])
     return dict(
         grid=dict(
             scenarios=[scenario],
@@ -164,6 +205,23 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument(
         "--router", default=None, choices=available_router_policies(),
         help="routing policy (implies the routed path even with --servers 1)",
+    )
+    ap.add_argument(
+        "--pools", default=None, type=parse_pools, metavar="P:D",
+        help="serve through a disaggregated prefill:decode fleet "
+        "(DisaggFleetSession) instead of a single frontend",
+    )
+    ap.add_argument(
+        "--deflect", default="never", choices=available_deflection_policies(),
+        help="disagg fleet: prefill-deflection policy from the registry",
+    )
+    ap.add_argument(
+        "--transfer-bw", type=float, default=900e9,
+        help="KV handoff bandwidth in bytes/sec (priced via CostModel.transfer_time)",
+    )
+    ap.add_argument(
+        "--transfer-lat", type=float, default=0.002,
+        help="KV handoff fixed latency in virtual seconds",
     )
     ap.add_argument("--clients", type=int, default=4, help="concurrent consumer tasks")
     ap.add_argument("--n", type=int, default=64, help="requests in the scenario")
@@ -208,6 +266,9 @@ def main(argv: Optional[List[str]] = None) -> dict:
             ap.error('the "replay" scenario requires --trace <file.jsonl>')
         scenario_kwargs = {"path": args.trace}
 
+    if args.pools is not None and (args.servers > 1 or args.router is not None):
+        ap.error("--pools (disagg) and --servers/--router are mutually exclusive")
+
     hcfg = HarnessConfig(
         n_requests=args.n,
         seed=args.seed,
@@ -217,11 +278,14 @@ def main(argv: Optional[List[str]] = None) -> dict:
         async_clients=args.clients,
         stream_buffer=args.stream_buffer,
         backpressure=args.backpressure,
+        deflect_policy=args.deflect,
+        transfer_bw=args.transfer_bw,
+        transfer_lat=args.transfer_lat,
     )
     report = run_loadgen(
         args.scenario, args.prefill, args.decode, hcfg,
         realtime=args.realtime, scenario_kwargs=scenario_kwargs,
-        servers=args.servers, router=args.router,
+        servers=args.servers, router=args.router, pools=args.pools,
     )
     text = json.dumps(report, indent=2, sort_keys=True)
     if args.out:

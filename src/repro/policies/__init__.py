@@ -7,17 +7,27 @@ Importing this package registers every built-in policy. Public surface:
     PrefillPolicy        protocol: select(queue, t_now, mu, budget)
     DecodePolicy         protocol: select(active, t_now) / observe(batch, t)
     RouterPolicy         protocol: select(replicas, request, prompt) -> idx
+    DeflectionPolicy     protocol: decide(fleet, request, prompt) -> bool
     register_prefill     class decorator, @register_prefill("my-policy")
     register_decode      class decorator (ctor takes the StepTimeLUT first)
     register_router      class decorator, @register_router("my-router")
+    register_deflection  class decorator, @register_deflection("my-rule")
     make_prefill         spec|name -> PrefillPolicy
     make_decode          spec|name, lut -> DecodePolicy
     make_router          spec|name -> RouterPolicy
-    available_policies   {"prefill": names, "decode": names, "router": names}
+    make_deflection      spec|name -> DeflectionPolicy
+    available_policies   {"prefill": ..., "decode": ..., "router": ...,
+                          "deflection": ...}
 """
 from repro.policies.decode import (
     ContinuousBatchingScheduler,
     SlackDecodeScheduler,
+)
+from repro.policies.deflection import (
+    NeverDeflect,
+    PrefillPressureDeflect,
+    ShortPromptDeflect,
+    SlackAwareDeflect,
 )
 from repro.policies.prefill import (
     EDFPrefillScheduler,
@@ -28,19 +38,23 @@ from repro.policies.prefill import (
 )
 from repro.policies.registry import (
     DecodePolicy,
+    DeflectionPolicy,
     Partition,
     PolicySpec,
     PrefillPolicy,
     RouterPolicy,
     Selection,
     available_decode_policies,
+    available_deflection_policies,
     available_policies,
     available_prefill_policies,
     available_router_policies,
     make_decode,
+    make_deflection,
     make_prefill,
     make_router,
     register_decode,
+    register_deflection,
     register_prefill,
     register_router,
 )
@@ -63,20 +77,28 @@ __all__ = [
     "PrefixAffinityRouter",
     "RoundRobinRouter",
     "SlackAwareRouter",
+    "NeverDeflect",
+    "PrefillPressureDeflect",
+    "ShortPromptDeflect",
+    "SlackAwareDeflect",
     "DecodePolicy",
+    "DeflectionPolicy",
     "Partition",
     "PolicySpec",
     "PrefillPolicy",
     "RouterPolicy",
     "Selection",
     "available_decode_policies",
+    "available_deflection_policies",
     "available_policies",
     "available_prefill_policies",
     "available_router_policies",
     "make_decode",
+    "make_deflection",
     "make_prefill",
     "make_router",
     "register_decode",
+    "register_deflection",
     "register_prefill",
     "register_router",
 ]

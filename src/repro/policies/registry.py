@@ -94,6 +94,24 @@ class RouterPolicy(Protocol):
                prompt: Sequence[int]) -> int: ...
 
 
+@runtime_checkable
+class DeflectionPolicy(Protocol):
+    """Prefill-deflection decision: should this request's *prefill* run on a
+    decode-pool server instead of the prefill pool?
+
+    ``fleet`` is a disagg fleet view (`repro.serving.disagg.DisaggSession`):
+    per-worker backlogs, throughput estimates, and free decode slots. Return
+    True to deflect — the request prefills on an underutilized decode server
+    and skips the cross-server KV handoff entirely (Microsoft's load-aware
+    prefill deflection, PAPERS.md).
+    """
+
+    name: str
+
+    def decide(self, fleet: Any, request: Request,
+               prompt: Sequence[int]) -> bool: ...
+
+
 @dataclass(frozen=True)
 class PolicySpec:
     """Serializable policy reference: registered name + construction kwargs.
@@ -123,6 +141,7 @@ class _Entry:
 _PREFILL: Dict[str, _Entry] = {}
 _DECODE: Dict[str, _Entry] = {}
 _ROUTER: Dict[str, _Entry] = {}
+_DEFLECTION: Dict[str, _Entry] = {}
 
 
 def register_prefill(name: str, **defaults):
@@ -160,6 +179,16 @@ def register_router(name: str, **defaults):
     return deco
 
 
+def register_deflection(name: str, **defaults):
+    """Class decorator: register a prefill-deflection policy under ``name``."""
+
+    def deco(cls):
+        _DEFLECTION[name] = _Entry(cls, defaults)
+        return cls
+
+    return deco
+
+
 def available_prefill_policies() -> Tuple[str, ...]:
     return tuple(sorted(_PREFILL))
 
@@ -172,6 +201,10 @@ def available_router_policies() -> Tuple[str, ...]:
     return tuple(sorted(_ROUTER))
 
 
+def available_deflection_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_DEFLECTION))
+
+
 def available_policies() -> Dict[str, Tuple[str, ...]]:
     """Every registered policy name, per side — the CLI help / parity-test
     enumeration entry point."""
@@ -179,6 +212,7 @@ def available_policies() -> Dict[str, Tuple[str, ...]]:
         "prefill": available_prefill_policies(),
         "decode": available_decode_policies(),
         "router": available_router_policies(),
+        "deflection": available_deflection_policies(),
     }
 
 
@@ -244,3 +278,10 @@ def make_decode(
 def make_router(spec: Union[str, PolicySpec], **soft_defaults: Any) -> RouterPolicy:
     """Construct a registered routing policy from a spec (or bare name)."""
     return _build(_ROUTER, "router", spec, (), soft_defaults)
+
+
+def make_deflection(
+    spec: Union[str, PolicySpec], **soft_defaults: Any
+) -> DeflectionPolicy:
+    """Construct a registered prefill-deflection policy from a spec/name."""
+    return _build(_DEFLECTION, "deflection", spec, (), soft_defaults)

@@ -62,3 +62,12 @@ class ManualClock:
 
     def advance(self, dt: float) -> None:
         self.t += dt
+
+    def reset(self) -> None:
+        """Re-zero virtual time. Sessions call this (via
+        `DisaggServer.reset_clock`) so runs accumulate ``auto_step`` from
+        exactly 0.0 — float accumulation depends on the starting value, so
+        without the reset two runs whose *construction* paths read the
+        clock a different number of times would disagree in the last ulp
+        even with identical serving-time read sequences."""
+        self.t = 0.0

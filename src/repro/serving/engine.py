@@ -61,6 +61,14 @@ class EngineConfig:
     # per-tenant bound on queued requests, applied on top of the global
     # bound (one tenant's burst can't monopolize admission); None = no quota
     tenant_queue_depth: Optional[int] = None
+    # KV-handoff pricing, shared with the simulator through
+    # `CalibratedCostModel.transfer_time` (lat + tokens * bytes / bw): the
+    # session's prefill->decode admission and the disagg fleet's
+    # cross-server handoff both wait this long per transfer. Units are
+    # engine *virtual* seconds; defaults match the sim's cost model.
+    transfer_lat: float = 0.002
+    transfer_bw: float = 900e9
+    kv_bytes_per_token: float = 500e3
 
 
 @dataclass
@@ -70,6 +78,9 @@ class LiveRequest:
     slot: Optional[int] = None
     prefill_cache: Optional[Dict] = None
     next_logits: Optional[np.ndarray] = None
+    # earliest virtual time the prefill->decode KV handoff may complete
+    # (prefill_finish + CostModel.transfer_time); None until prefill is done
+    transfer_ready_at: Optional[float] = None
 
 
 class PrefillEngine:
@@ -120,8 +131,12 @@ class DecodeEngine:
 
         self._step = jax.jit(step)
 
-    def admit(self, lr: LiveRequest) -> bool:
-        """Transfer prefill KV into a decode slot (the PD handoff)."""
+    def reserve(self, lr: LiveRequest) -> bool:
+        """Reserve a decode slot for lr without copying KV into it yet.
+
+        The disagg fleet reserves at transfer *start* so a handoff never
+        arrives at a full decode server; `attach` completes the copy.
+        """
         r = lr.req
         need = r.input_len + r.output_len
         # prefix-cache credit: tokens matched at submit time share KV with an
@@ -130,12 +145,21 @@ class DecodeEngine:
         if slot is None:
             return False
         lr.slot = slot
-        # copy prefill cache (1, max_len) into decode slot
+        return True
+
+    def attach(self, lr: LiveRequest) -> None:
+        """Copy lr's prefill cache (1, max_len) into its reserved slot."""
         sub = jax.tree.map(lambda x: x, lr.prefill_cache)
         self.cache = scatter_slots(
-            self.model.cfg, self.cache, sub, jnp.asarray([slot], jnp.int32)
+            self.model.cfg, self.cache, sub, jnp.asarray([lr.slot], jnp.int32)
         )
         lr.prefill_cache = None
+
+    def admit(self, lr: LiveRequest) -> bool:
+        """Transfer prefill KV into a decode slot (the PD handoff)."""
+        if not self.reserve(lr):
+            return False
+        self.attach(lr)
         return True
 
     def release(self, lr: LiveRequest) -> None:
@@ -195,6 +219,15 @@ class DisaggServer:
             ecfg.decode_policy, self.lut, slo_margin=ecfg.slo_margin
         )
         self.mu = PrefillThroughputEstimator(mu=2000.0)
+        # transfer pricing shared with the simulator: one formula for both
+        # the in-server admission handoff and the fleet's cross-server copy
+        from repro.sim.costmodel import CalibratedCostModel  # no import cycle
+
+        self.cost = CalibratedCostModel(
+            transfer_lat=ecfg.transfer_lat,
+            kv_bytes_per_token=ecfg.kv_bytes_per_token,
+            transfer_bw=ecfg.transfer_bw,
+        )
         self._key = jax.random.key(0)
         self._t0 = self.clock.monotonic()
         self.last_session = None  # ServeSession of the most recent serve()
@@ -204,8 +237,14 @@ class DisaggServer:
         return (self.clock.monotonic() - self._t0) * self.ecfg.time_scale
 
     def reset_clock(self) -> None:
-        """Re-zero virtual time (arrivals are relative to this origin)."""
-        self._t0 = self.clock.monotonic()
+        """Re-zero virtual time (arrivals are relative to this origin).
+        Virtual clocks re-zero *exactly* (t = 0.0) so timings are invariant
+        to how many construction-time reads preceded the session."""
+        if hasattr(self.clock, "reset"):
+            self.clock.reset()
+            self._t0 = 0.0
+        else:
+            self._t0 = self.clock.monotonic()
 
     # ------------------------------------------------------------------ serve
     def serve(self, requests: List[Tuple[Request, List[int]]]) -> Dict[int, List[int]]:

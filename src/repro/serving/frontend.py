@@ -221,6 +221,7 @@ class AsyncServeSession:
         backpressure: str = "block",
         idle_wait: float = 0.001,
         prefix_cache: Optional[Any] = None,
+        session: Optional[Any] = None,
     ):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(
@@ -228,20 +229,28 @@ class AsyncServeSession:
             )
         if stream_buffer < 1:
             raise ValueError("stream_buffer must be >= 1")
-        self.session = ServeSession(
-            server,
-            max_queue_depth=max_queue_depth,
-            tenant_queue_depth=tenant_queue_depth,
-            on_token=self._collect_token,
-            prefix_cache=prefix_cache,
-        )
+        if session is not None:
+            # session injection: a pre-built ServeSession-shaped core (e.g.
+            # repro.serving.disagg.DisaggSession) keeps this frontend's whole
+            # submit/stream/cancel/replay machinery; the core only needs the
+            # duck type (server/submit/step/cancel/outputs/metrics/on_token)
+            session.on_token = self._collect_token
+            self.session = session
+        else:
+            self.session = ServeSession(
+                server,
+                max_queue_depth=max_queue_depth,
+                tenant_queue_depth=tenant_queue_depth,
+                on_token=self._collect_token,
+                prefix_cache=prefix_cache,
+            )
         self.stream_buffer = stream_buffer
         self.backpressure = backpressure
         self.idle_wait = idle_wait
         # ManualClock-style clocks expose advance(); their sleep() returns
         # instantly, so the stepper may call it inline. A wall clock must be
         # awaited instead or it would block the entire event loop.
-        self._virtual_clock = hasattr(server.clock, "advance")
+        self._virtual_clock = hasattr(self.session.server.clock, "advance")
 
         self._handles: Dict[int, RequestHandle] = {}  # admitted, streaming
         self._scheduled: List[_Intent] = []  # heap: (arrival, seq)

@@ -252,6 +252,9 @@ class ServeSession:
                     req.n_generated = 1
                     req.token_times.append(fin)
                     req.phase = Phase.TRANSFER
+                    # price the PD handoff with the simulator's formula: the
+                    # KV is admissible only after lat + bytes/bw has elapsed
+                    lr.transfer_ready_at = fin + srv.cost.transfer_time(req.input_len)
                     self.queue.remove(lr)
                     self.waiting_adm.append(lr)
                     self._emit(req, tok, fin)
@@ -260,12 +263,16 @@ class ServeSession:
                 srv.mu.update(total, max(elapsed, 1e-9))
 
         # ---- admission (KV transfer) ------------------------------------
+        admitted = False
         for lr in list(self.waiting_adm):
+            if lr.transfer_ready_at is not None and now < lr.transfer_ready_at:
+                continue  # KV still on the wire
             if srv.decode.admit(lr):
                 lr.req.phase = Phase.DECODE
                 lr.req.decode_start = srv._now()
                 self.waiting_adm.remove(lr)
                 self.active.append(lr)
+                admitted = True
 
         # ---- decode side -------------------------------------------------
         if self.active:
@@ -300,6 +307,13 @@ class ServeSession:
                     self.metrics.completed += 1
                     self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
                     completed.append(r.rid)
+
+        # when the only remaining work is KV on the wire, nudge the clock
+        # toward the earliest transfer_ready_at so virtual-clock drivers
+        # (ManualClock) make progress instead of spinning at `now`
+        if self.waiting_adm and not admitted and not self.queue and not self.active:
+            nxt = min((lr.transfer_ready_at or 0.0) for lr in self.waiting_adm)
+            clock.sleep(min(0.001, max(0.0, nxt - srv._now())))
         return completed
 
     # ----------------------------------------------------------------- run

@@ -21,7 +21,7 @@ second — the paper-style "useful throughput" a sweep should maximize.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
@@ -85,6 +85,21 @@ def attainment_by(
     for r in requests:
         groups.setdefault(keyfn(r), []).append(r)
     return {k: attainment(groups[k], done_only=done_only) for k in sorted(groups)}
+
+
+def attainment_by_pool(
+    requests: Sequence[Request],
+    pools: Mapping[int, str],
+    done_only: bool = False,
+) -> Dict[str, Attainment]:
+    """Attainment broken down by fleet pool label: ``pools`` maps rid ->
+    worker label (`repro.serving.disagg.DisaggSession.pool_labels`), so a
+    disagg cell can report prefill-pool TTFT vs decode-pool TPOT attainment
+    separately. Requests never placed on a worker (shed before placement,
+    cancelled pre-prefill for the decode leg) group under ``"unassigned"``."""
+    return attainment_by(
+        requests, lambda r: pools.get(r.rid, "unassigned"), done_only=done_only
+    )
 
 
 def goodput(requests: Sequence[Request], span: Optional[float] = None) -> float:

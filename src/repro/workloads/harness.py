@@ -1,6 +1,6 @@
 """Evaluation harness: (scenario × prefill × decode × backend) grids.
 
-One report schema over four backends:
+One report schema over five backends:
 
     sim          `DisaggSimulator` via `run_policy` — paper-scale lengths
                  and SLOs, discrete-event time
@@ -24,6 +24,14 @@ One report schema over four backends:
                  prefix hit rates). With 1 replica it reproduces the
                  async-engine cell bit-for-bit — the routing layer adds no
                  clock reads of its own.
+    disagg       a P/D-split fleet (`repro.serving.disagg`): a prefill pool
+                 and a decode pool of servers on ONE shared ManualClock,
+                 with an explicit KV handoff (priced by
+                 ``CostModel.transfer_time``, bounded in-flight window) and
+                 registered prefill-deflection policies. The cell carries a
+                 ``disagg`` block: handoff/deflection records plus per-pool
+                 attainment. A 1P:1D fleet under ``never`` deflection
+                 reproduces the 1-replica router cell bit-for-bit.
 
 Scenario traces are paper-scale (prompts up to 128K tokens); the engine
 backend maps each request onto an engine-scale twin (prompt/output lengths
@@ -53,7 +61,21 @@ from repro.sim.metrics import attainment, attainment_by, goodput
 from repro.sim.simulator import SimConfig, run_policy
 from repro.workloads.scenarios import make_scenario
 
-BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine", "router")
+BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine", "router", "disagg")
+
+
+def parse_pools(spec: str) -> Tuple[int, int]:
+    """Parse a ``"P:D"`` pool-size spec into (prefill, decode) counts."""
+    try:
+        p_str, d_str = spec.split(":")
+        p, d = int(p_str), int(d_str)
+    except ValueError:
+        raise ValueError(
+            f"pool spec must be 'P:D' with integer pool sizes (e.g. 2:2), got {spec!r}"
+        ) from None
+    if p < 1 or d < 1:
+        raise ValueError(f"pool sizes must be >= 1, got {spec!r}")
+    return p, d
 
 
 @dataclass(frozen=True)
@@ -104,6 +126,15 @@ class HarnessConfig:
     router_policy: str = "least-queued"
     prefix_block: int = 4
     prefix_cache_blocks: Optional[int] = None
+    # disagg backend: prefill/decode pool sizes, the registered deflection
+    # policy, KV-transfer pricing (shared by every engine backend's
+    # admission handoff via EngineConfig), and the in-flight transfer bound
+    disagg_prefill: int = 2
+    disagg_decode: int = 2
+    deflect_policy: str = "never"
+    transfer_lat: float = 0.002
+    transfer_bw: float = 900e9
+    max_inflight_transfers: int = 8
 
     def as_dict(self) -> Dict:
         # the report's run-identity block: every knob (asdict recurses into
@@ -243,11 +274,14 @@ def _engine_setup(
     hcfg: HarnessConfig,
     bundle: _EngineBundle,
     n_servers: int = 1,
+    shared_clock: bool = False,
 ):
-    """Shared (engine | async-engine | router) setup: request twins plus
-    ``n_servers`` fresh servers, each on its own deterministic ManualClock.
-    Identical construction is what makes the engine backends directly
-    comparable (and the 1-replica router cell bit-identical to async-engine).
+    """Shared (engine | async-engine | router | disagg) setup: request twins
+    plus ``n_servers`` fresh servers, each on its own deterministic
+    ManualClock — or all on ONE shared clock (``shared_clock``, the disagg
+    fleet's single-timeline requirement). Identical construction is what
+    makes the engine backends directly comparable (and the 1-replica router
+    cell bit-identical to async-engine).
     Returns ``(servers, pairs)``; single-server callers unpack ``servers[0]``.
     """
     from repro.serving.clock import ManualClock
@@ -264,10 +298,16 @@ def _engine_setup(
         decode_policy=decode,
         admission_queue_depth=hcfg.queue_depth,
         tenant_queue_depth=hcfg.tenant_quota,
+        transfer_lat=hcfg.transfer_lat,
+        transfer_bw=hcfg.transfer_bw,
     )
+    fleet_clock = ManualClock(auto_step=1e-4) if shared_clock else None
     servers = [
         DisaggServer(
-            bundle.model, bundle.params, ecfg, clock=ManualClock(auto_step=1e-4)
+            bundle.model,
+            bundle.params,
+            ecfg,
+            clock=fleet_clock if shared_clock else ManualClock(auto_step=1e-4),
         )
         for _ in range(n_servers)
     ]
@@ -367,6 +407,69 @@ def _run_router(
     return [r for r, _ in pairs], router_cell_block(router.summary())
 
 
+def disagg_cell_block(core, reqs: Sequence[Request]) -> Dict:
+    """Project a `DisaggSession` into the report cell's ``disagg`` block:
+    pool topology, the KV-handoff record, the deflection record, and the
+    per-pool attainment split (which prefill worker's TTFT / which decode
+    worker's TPOT story each pool tells)."""
+    from repro.sim.metrics import attainment_by_pool
+
+    labels = core.pool_labels()
+    return dict(
+        pools=dict(prefill=len(core.prefill_pool), decode=len(core.decode_pool)),
+        deflect=core.deflect.name,
+        handoff=core.handoff_summary(),
+        deflection=core.deflection_summary(),
+        attainment_by_prefill_pool={
+            k: v.as_dict()
+            for k, v in attainment_by_pool(reqs, labels["prefill"]).items()
+        },
+        attainment_by_decode_pool={
+            k: v.as_dict()
+            for k, v in attainment_by_pool(reqs, labels["decode"]).items()
+        },
+    )
+
+
+def _run_disagg(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+) -> Tuple[List[Request], Dict]:
+    """The P/D-split cell: ``disagg_prefill``:``disagg_decode`` servers on
+    ONE shared ManualClock behind a `DisaggFleetSession`, prefill deflection
+    by ``deflect_policy``. Returns the terminal requests plus the report's
+    ``disagg`` block."""
+    import asyncio
+
+    from repro.serving.disagg import DisaggFleetSession
+
+    servers, pairs = _engine_setup(
+        reqs,
+        prefill,
+        decode,
+        hcfg,
+        bundle,
+        n_servers=hcfg.disagg_prefill + hcfg.disagg_decode,
+        shared_clock=True,
+    )
+
+    async def _serve() -> DisaggFleetSession:
+        fleet = DisaggFleetSession(
+            servers[: hcfg.disagg_prefill],
+            servers[hcfg.disagg_prefill :],
+            deflection=hcfg.deflect_policy,
+            stream_buffer=hcfg.stream_buffer,
+            backpressure=hcfg.backpressure,
+            max_inflight_transfers=hcfg.max_inflight_transfers,
+        )
+        async with fleet:
+            await fleet.replay(pairs, clients=hcfg.async_clients)
+        return fleet
+
+    fleet = asyncio.run(_serve())
+    terminal = [r for r, _ in pairs]
+    return terminal, disagg_cell_block(fleet.core, terminal)
+
+
 def evaluate_cell(
     scenario: str,
     prefill: str,
@@ -400,12 +503,15 @@ def evaluate_cell(
     # never anything a scheduling decision reads
     t0 = time.perf_counter()  # repro: allow[RPA001] intentional host wall time
     router_block = None
+    disagg_block = None
     if backend == "sim":
         terminal = _run_sim(reqs, prefill, decode, hcfg)
     elif backend == "engine":
         terminal = _run_engine(reqs, prefill, decode, hcfg, bundle)
     elif backend == "async-engine":
         terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle)
+    elif backend == "disagg":
+        terminal, disagg_block = _run_disagg(reqs, prefill, decode, hcfg, bundle)
     else:
         terminal, router_block = _run_router(reqs, prefill, decode, hcfg, bundle)
     cell = dict(
@@ -418,6 +524,8 @@ def evaluate_cell(
     cell.update(_cell_report(terminal))
     if router_block is not None:
         cell["router"] = router_block
+    if disagg_block is not None:
+        cell["disagg"] = disagg_block
     return cell
 
 

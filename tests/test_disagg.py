@@ -1,0 +1,474 @@
+"""P/D disaggregation: pools, KV handoff, and prefill deflection.
+
+  * deflection policies as pure functions of the fleet view, registered
+    under the fourth registry side (`never` / `short-prompt-threshold` /
+    `prefill-pressure` / `slack-aware`)
+  * `DisaggSession` placement: join-shortest-token-backlog with the
+    least-assigned tiebreak round-robins an idle prefill pool
+  * KV-handoff lifecycle: decode_start is gated by the priced transfer
+    (`CostModel.transfer_time`) on BOTH the single-server session and the
+    fleet; the bounded in-flight window queues handoffs under pressure
+  * cancel mid-handoff reclaims everything: the queued/in-flight transfer
+    entry, the prefill KV, and the reserved decode slot
+  * 1P:1D under `never` deflection is bit-identical to a 1-replica router
+    fleet on a `ManualClock` — disaggregating adds no clock reads
+  * harness `disagg` backend cell schema + evaluate/loadgen CLI flags
+  * `attainment_by_pool` groups by worker label with an `unassigned` bucket
+"""
+import asyncio
+import copy
+from dataclasses import dataclass, field
+from typing import List
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import Phase, Request, SLOSpec
+from repro.models import build_model
+from repro.policies import (
+    available_deflection_policies,
+    available_policies,
+    make_deflection,
+)
+from repro.serving.clock import ManualClock
+from repro.serving.disagg import DisaggFleetSession, DisaggSession
+from repro.serving.engine import DisaggServer, EngineConfig
+from repro.serving.router import RouterSession
+from repro.serving.session import ServeSession
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _server(tiny_model, clock=None, **ecfg_kw):
+    cfg, model, params = tiny_model
+    kw = dict(max_slots=4, max_len=64, chunk_size=16)
+    kw.update(ecfg_kw)
+    return DisaggServer(
+        model, params, EngineConfig(**kw),
+        clock=clock if clock is not None else ManualClock(auto_step=1e-4),
+    )
+
+
+def _fleet(tiny_model, n_prefill=1, n_decode=1, **ecfg_kw):
+    """P+D servers on ONE shared ManualClock (the fleet requirement)."""
+    clock = ManualClock(auto_step=1e-4)
+    servers = [
+        _server(tiny_model, clock=clock, **ecfg_kw)
+        for _ in range(n_prefill + n_decode)
+    ]
+    return servers[:n_prefill], servers[n_prefill:]
+
+
+def _requests(cfg, n=4, max_out=4, seed=0, arrival_gap=0.0, prompt_len=None):
+    rng = np.random.default_rng(seed)
+    prompts = [
+        list(map(int, rng.integers(
+            2, cfg.vocab_size,
+            prompt_len if prompt_len else int(rng.integers(4, 14)),
+        )))
+        for _ in range(n)
+    ]
+    return [
+        (
+            Request(rid=i, arrival=arrival_gap * i, input_len=len(p),
+                    output_len=max_out, slo=SLOSpec(ttft=120.0, tpot=10.0)),
+            p,
+        )
+        for i, p in enumerate(prompts)
+    ]
+
+
+def _drain(sess, max_steps=2000):
+    for _ in range(max_steps):
+        if not sess.has_work:
+            return
+        sess.step()
+    raise AssertionError("disagg fleet did not drain")
+
+
+# -------------------------------------------------------- deflection policies
+@dataclass
+class FakeWorker:
+    pending_prefill_tokens: int = 0
+    queue_len: int = 0
+    mu: float = 100.0
+    free_slots: int = 4
+
+
+@dataclass
+class FakeFleet:
+    prefill_pool: List[FakeWorker] = field(default_factory=list)
+    decode_pool: List[FakeWorker] = field(default_factory=list)
+    capacity: bool = True
+
+    def decode_has_capacity(self):
+        return self.capacity
+
+
+def _req(input_len, ttft=1.0):
+    return Request(rid=0, arrival=0.0, input_len=input_len, output_len=4,
+                   slo=SLOSpec(ttft=ttft, tpot=10.0))
+
+
+def test_deflection_registry_side():
+    names = available_deflection_policies()
+    assert list(names) == sorted(names)
+    assert set(names) >= {
+        "never", "short-prompt-threshold", "prefill-pressure", "slack-aware"
+    }
+    assert list(available_policies()["deflection"]) == list(names)
+
+
+def test_never_deflect_always_declines():
+    fleet = FakeFleet(prefill_pool=[FakeWorker(pending_prefill_tokens=10_000)],
+                      decode_pool=[FakeWorker()])
+    pol = make_deflection("never")
+    assert pol.name == "never"
+    assert pol.decide(fleet, _req(2), [1, 2]) is False
+
+
+def test_short_prompt_threshold_is_load_blind():
+    fleet = FakeFleet(prefill_pool=[FakeWorker()], decode_pool=[FakeWorker()])
+    pol = make_deflection("short-prompt-threshold")
+    # deflects short prompts even with a completely idle prefill pool...
+    assert pol.decide(fleet, _req(8), [0] * 8)
+    assert not pol.decide(fleet, _req(9), [0] * 9)  # ...but only short ones
+    fleet.capacity = False
+    assert not pol.decide(fleet, _req(8), [0] * 8)  # and never over capacity
+
+
+def test_prefill_pressure_watermark_is_pool_total():
+    pol = make_deflection("prefill-pressure")
+    idle = FakeFleet(prefill_pool=[FakeWorker(), FakeWorker()],
+                     decode_pool=[FakeWorker()])
+    assert not pol.decide(idle, _req(4), [0] * 4)  # no pressure, no deflection
+    # pressure is the pool TOTAL: one busy + one idle worker still trips the
+    # watermark (a min-based signal would be pinned to 0 by the idle worker)
+    pressured = FakeFleet(
+        prefill_pool=[FakeWorker(pending_prefill_tokens=6), FakeWorker()],
+        decode_pool=[FakeWorker()],
+    )
+    assert pol.decide(pressured, _req(4), [0] * 4)
+    assert not pol.decide(pressured, _req(40), [0] * 40)  # long prompts stay
+    pressured.capacity = False
+    assert not pol.decide(pressured, _req(4), [0] * 4)
+
+
+def test_prefill_pressure_watermark_override():
+    from repro.policies import PolicySpec
+
+    pol = make_deflection(PolicySpec("prefill-pressure",
+                                     {"watermark_tokens": 100}))
+    fleet = FakeFleet(prefill_pool=[FakeWorker(pending_prefill_tokens=99)],
+                      decode_pool=[FakeWorker()])
+    assert not pol.decide(fleet, _req(4), [0] * 4)
+    fleet.prefill_pool[0].pending_prefill_tokens = 100
+    assert pol.decide(fleet, _req(4), [0] * 4)
+
+
+def test_slack_aware_deflects_only_when_decode_wins():
+    pol = make_deflection("slack-aware")
+    # prefill pool clears the prompt well inside the TTFT budget: stay
+    fast = FakeFleet(prefill_pool=[FakeWorker(mu=1000.0)],
+                     decode_pool=[FakeWorker(mu=1000.0)])
+    assert not pol.decide(fast, _req(4, ttft=1.0), [0] * 4)
+    # prefill pool blows the budget and the decode pool beats its ETA: go
+    slow = FakeFleet(
+        prefill_pool=[FakeWorker(pending_prefill_tokens=500, mu=100.0)],
+        decode_pool=[FakeWorker(mu=100.0)],
+    )
+    assert pol.decide(slow, _req(4, ttft=1.0), [0] * 4)
+    # decode pool just as backed up: deflecting buys nothing
+    slow.decode_pool[0].pending_prefill_tokens = 500
+    assert not pol.decide(slow, _req(4, ttft=1.0), [0] * 4)
+
+
+# ------------------------------------------------------- fleet construction
+def test_fleet_requires_one_shared_clock(tiny_model):
+    with pytest.raises(ValueError, match="share one Clock"):
+        DisaggSession([_server(tiny_model)], [_server(tiny_model)])
+
+
+def test_fleet_requires_both_pools(tiny_model):
+    prefill, _ = _fleet(tiny_model, 1, 1)
+    with pytest.raises(ValueError, match="prefill and >= 1 decode"):
+        DisaggSession(prefill, [])
+
+
+def test_prefill_placement_round_robins_an_idle_pool(tiny_model):
+    prefill, decode = _fleet(tiny_model, 2, 1)
+    sess = DisaggSession(prefill, decode)
+    for r, p in _requests(tiny_model[0], n=4, prompt_len=6):
+        sess.submit(r, p)
+    labels = sess.pool_labels()["prefill"]
+    # equal-length prompts: backlog/queue keys tie, the assigned tiebreak
+    # alternates instead of pinning everything to prefill:0
+    assert sorted(labels.values()) == ["prefill:0", "prefill:0",
+                                      "prefill:1", "prefill:1"]
+    assert [w.assigned for w in sess.prefill_pool] == [2, 2]
+
+
+# ------------------------------------------------------------ KV handoff
+def test_decode_start_gated_by_transfer_time_single_server(tiny_model):
+    """Satellite unification: the single-server session prices its
+    prefill->decode admission with the SAME CostModel.transfer_time the
+    fleet uses for cross-server handoff."""
+    srv = _server(tiny_model, transfer_lat=0.05)
+    sess = ServeSession(srv)
+    pairs = _requests(tiny_model[0], n=2)
+    for r, p in pairs:
+        sess.submit(r, p)
+    for _ in range(2000):
+        if not sess.has_work:
+            break
+        sess.step()
+    for r, _ in pairs:
+        assert r.phase == Phase.DONE
+        gap = r.decode_start - r.prefill_finish
+        assert gap >= srv.cost.transfer_time(r.input_len)
+
+
+def test_decode_start_gated_by_transfer_time_fleet(tiny_model):
+    prefill, decode = _fleet(tiny_model, 1, 1, transfer_lat=0.05)
+    sess = DisaggSession(prefill, decode)
+    pairs = _requests(tiny_model[0], n=2)
+    for r, p in pairs:
+        sess.submit(r, p)
+    _drain(sess)
+    cost = prefill[0].cost
+    for r, _ in pairs:
+        assert r.phase == Phase.DONE
+        assert r.decode_start - r.prefill_finish >= cost.transfer_time(r.input_len)
+    h = sess.handoff_summary()
+    assert h["transfers_completed"] == 2
+    assert h["cross_transfers"] == 2 and h["local_transfers"] == 0
+    assert h["bytes_transferred"] == pytest.approx(
+        sum(r.input_len for r, _ in pairs) * prefill[0].ecfg.kv_bytes_per_token
+    )
+
+
+def test_cancel_mid_handoff_reclaims_everything(tiny_model):
+    """A cancel landing while the KV is on the wire must reclaim the
+    transfer-window entry, the prefill cache, AND the decode slot that was
+    reserved at transfer start — no leaked slots in either pool."""
+    prefill, decode = _fleet(tiny_model, 1, 1, transfer_lat=0.5)
+    sess = DisaggSession(prefill, decode)
+    (r, p), = _requests(tiny_model[0], n=1)
+    sess.submit(r, p)
+    sess.step()  # prefill completes; the 0.5s transfer is now in flight
+    assert r.phase == Phase.TRANSFER
+    assert len(sess.inflight) == 1
+    tr = sess.inflight[0]
+    assert len(tr.dst.server.decode.alloc.free) == 3  # slot reserved
+    assert sess.cancel(r.rid)
+    assert r.phase == Phase.CANCELLED
+    assert not sess.inflight and not sess.pending_handoff
+    assert tr.lr.prefill_cache is None
+    assert len(tr.dst.server.decode.alloc.free) == 4  # slot reclaimed
+    assert sess.handoff.transfers_cancelled == 1
+    assert not sess.has_work
+    assert sess.metrics.cancelled == 1 and r.rid in sess.metrics.cancelled_rids
+
+
+def test_cancel_queued_handoff_reclaims_entry(tiny_model):
+    """Same contract one stage earlier: a cancel while the handoff is still
+    queued (window full) drops the queue entry; no decode slot was reserved
+    yet, so the decode pool is untouched."""
+    prefill, decode = _fleet(tiny_model, 1, 1, transfer_lat=0.5)
+    sess = DisaggSession(prefill, decode, max_inflight_transfers=1)
+    pairs = _requests(tiny_model[0], n=2)
+    for r, p in pairs:
+        sess.submit(r, p)
+    for _ in range(10):  # prefills finish; window of 1 -> second handoff queues
+        sess.step()
+        if sess.pending_handoff:
+            break
+    assert len(sess.inflight) == 1 and len(sess.pending_handoff) == 1
+    queued = sess.pending_handoff[0].lr.req
+    assert sess.cancel(queued.rid)
+    assert queued.phase == Phase.CANCELLED
+    assert not sess.pending_handoff
+    assert sess.handoff.transfers_cancelled == 1
+    assert len(decode[0].decode.alloc.free) == 3  # only the in-flight slot
+
+
+def test_bounded_inflight_window_queues_handoffs(tiny_model):
+    prefill, decode = _fleet(tiny_model, 1, 1, transfer_lat=0.01)
+    sess = DisaggSession(prefill, decode, max_inflight_transfers=1)
+    pairs = _requests(tiny_model[0], n=3)
+    for r, p in pairs:
+        sess.submit(r, p)
+    _drain(sess)
+    h = sess.handoff_summary()
+    assert all(r.phase == Phase.DONE for r, _ in pairs)
+    assert h["transfers_completed"] == 3
+    assert h["inflight_peak"] == 1  # the window bound held
+    assert h["queued_peak"] >= 1  # and handoffs actually queued behind it
+    assert h["queue_wait_total"] > 0.0
+    assert h["queue_wait_max"] > 0.0
+
+
+def test_deflected_prefill_stays_local(tiny_model):
+    """`short-prompt-threshold` sends every short prompt to the decode pool:
+    its prefill runs there and the handoff never crosses servers."""
+    prefill, decode = _fleet(tiny_model, 1, 1)
+    sess = DisaggSession(prefill, decode, deflection="short-prompt-threshold")
+    pairs = _requests(tiny_model[0], n=4, prompt_len=6)  # all <= 8 tokens
+    for r, p in pairs:
+        sess.submit(r, p)
+    _drain(sess)
+    d = sess.deflection_summary()
+    assert d["policy"] == "short-prompt-threshold"
+    assert d["deflected"] == 4 and d["by_dst"] == {"decode:0": 4}
+    h = sess.handoff_summary()
+    assert h["local_transfers"] == 4 and h["cross_transfers"] == 0
+    labels = sess.pool_labels()
+    assert all(v == "decode:0" for v in labels["prefill"].values())
+    assert all(r.phase == Phase.DONE for r, _ in pairs)
+
+
+# ------------------------------------------------------------- bit-parity
+def test_1p1d_never_deflection_is_bit_identical_to_router(tiny_model):
+    """The disaggregation determinism contract: a 1P:1D fleet under `never`
+    deflection replays bit-for-bit against a 1-replica router fleet on a
+    ManualClock — splitting prefill from decode adds no clock reads, and
+    the handoff prices exactly the admission gate the single server runs."""
+    pairs_router = _requests(tiny_model[0], n=5, max_out=4, seed=2,
+                             arrival_gap=0.01)
+    pairs_disagg = copy.deepcopy(pairs_router)
+
+    async def run_router():
+        router = RouterSession([_server(tiny_model)], policy="round-robin")
+        async with router:
+            return await router.replay(pairs_router, clients=3)
+
+    async def run_disagg():
+        prefill, decode = _fleet(tiny_model, 1, 1)
+        fleet = DisaggFleetSession(prefill, decode, deflection="never")
+        async with fleet:
+            return await fleet.replay(pairs_disagg, clients=3)
+
+    outs_router = asyncio.run(run_router())
+    outs_disagg = asyncio.run(run_disagg())
+    assert outs_router == outs_disagg
+    for (rr, _), (rd, _) in zip(pairs_router, pairs_disagg, strict=True):
+        assert rr.phase == rd.phase == Phase.DONE
+        # exact equality: same virtual clock reads in the same order
+        assert rr.ttft() == rd.ttft()
+        assert rr.mean_tpot() == rd.mean_tpot()
+        assert rr.token_times == rd.token_times
+
+
+def test_harness_disagg_1p1d_matches_router_report():
+    """The same parity at the report level: the disagg cell with a 1:1
+    split and `never` deflection carries exactly the 1-replica router
+    cell's attainment and goodput."""
+    from repro.workloads.harness import HarnessConfig, evaluate_cell
+
+    hcfg = HarnessConfig(n_requests=10, router_replicas=1,
+                         router_policy="round-robin",
+                         disagg_prefill=1, disagg_decode=1,
+                         deflect_policy="never")
+    router_cell = evaluate_cell("multi-tenant", "kairos-urgency",
+                                "kairos-slack", "router", hcfg=hcfg)
+    disagg_cell = evaluate_cell("multi-tenant", "kairos-urgency",
+                                "kairos-slack", "disagg", hcfg=hcfg)
+    assert disagg_cell["backend"] == "disagg"
+    assert disagg_cell["attainment"] == router_cell["attainment"]
+    assert disagg_cell["per_tenant"] == router_cell["per_tenant"]
+    assert disagg_cell["goodput"] == router_cell["goodput"]
+    block = disagg_cell["disagg"]
+    assert block["pools"] == dict(prefill=1, decode=1)
+    assert block["deflect"] == "never"
+    assert block["deflection"]["deflected"] == 0
+    assert block["handoff"]["transfers_completed"] == disagg_cell["n_completed"]
+    assert set(block["attainment_by_prefill_pool"]) == {"prefill:0"}
+    assert set(block["attainment_by_decode_pool"]) == {"decode:0"}
+
+
+# -------------------------------------------------------- metrics / report
+def test_attainment_by_pool_groups_and_unassigned():
+    from repro.sim.metrics import attainment_by_pool
+
+    def req(rid, phase):
+        r = Request(rid=rid, arrival=0.0, input_len=4, output_len=2,
+                    slo=SLOSpec(ttft=1.0, tpot=1.0))
+        r.phase = phase
+        if phase == Phase.DONE:
+            r.prefill_finish = 0.1
+            r.first_token_time = 0.1
+            r.n_generated = 2
+            r.token_times = [0.1, 0.2]
+            r.done_time = 0.2
+        return r
+
+    reqs = [req(0, Phase.DONE), req(1, Phase.DONE), req(2, Phase.FAILED)]
+    out = attainment_by_pool(reqs, {0: "prefill:0", 1: "prefill:1"})
+    assert set(out) == {"prefill:0", "prefill:1", "unassigned"}
+    assert out["prefill:0"].n == 1 and out["prefill:0"].ttft == 1.0
+    assert out["unassigned"].n_shed == 1
+
+
+# ------------------------------------------------------------------- CLIs
+def test_parse_pools():
+    from repro.workloads.harness import parse_pools
+
+    assert parse_pools("2:2") == (2, 2)
+    assert parse_pools("1:3") == (1, 3)
+    with pytest.raises(ValueError):
+        parse_pools("2")
+    with pytest.raises(ValueError):
+        parse_pools("0:2")
+    with pytest.raises(ValueError):
+        parse_pools("a:b")
+
+
+def test_evaluate_cli_rejects_bad_pools():
+    from repro.launch.evaluate import build_parser
+
+    with pytest.raises(SystemExit):
+        build_parser().parse_args(["--pools", "nope"])
+
+
+def test_evaluate_cli_disagg_flags_parse():
+    from repro.launch.evaluate import build_parser
+
+    args = build_parser().parse_args(
+        ["--backend", "disagg", "--pools", "3:1", "--deflect",
+         "prefill-pressure", "--transfer-lat", "0.01", "--transfer-bw", "1e9"]
+    )
+    assert args.pools == (3, 1)
+    assert args.deflect == "prefill-pressure"
+    assert args.transfer_lat == 0.01 and args.transfer_bw == 1e9
+
+
+def test_evaluate_list_policies_includes_deflection(capsys):
+    from repro.launch.evaluate import main
+
+    main(["--list-policies"])
+    out = capsys.readouterr().out
+    assert "deflection:" in out
+    assert "prefill-pressure" in out
+
+
+def test_loadgen_cli_disagg_flags_parse():
+    from repro.launch.loadgen import build_parser
+
+    args = build_parser().parse_args(["--pools", "1:1", "--deflect", "slack-aware"])
+    assert args.pools == (1, 1)
+    assert args.deflect == "slack-aware"
+
+
+def test_loadgen_cli_pools_excludes_router():
+    from repro.launch.loadgen import main
+
+    with pytest.raises(SystemExit):
+        main(["--pools", "1:1", "--servers", "2", "--n", "2"])

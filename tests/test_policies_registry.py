@@ -6,6 +6,7 @@ from repro.policies import (
     PolicySpec,
     SlackDecodeScheduler,
     available_decode_policies,
+    available_deflection_policies,
     available_policies,
     available_prefill_policies,
     available_router_policies,
@@ -22,7 +23,7 @@ def _lut():
 
 def test_available_policies_enumerates_every_side():
     pol = available_policies()
-    assert set(pol) == {"prefill", "decode", "router"}
+    assert set(pol) == {"prefill", "decode", "router", "deflection"}
     assert set(pol["prefill"]) == {
         "kairos-urgency", "kairos-urgency-plus", "fcfs", "sjf", "edf",
     }
@@ -30,9 +31,13 @@ def test_available_policies_enumerates_every_side():
     assert set(pol["router"]) == {
         "round-robin", "least-queued", "slack-aware", "prefix-affinity",
     }
+    assert set(pol["deflection"]) == {
+        "never", "short-prompt-threshold", "prefill-pressure", "slack-aware",
+    }
     assert pol["prefill"] == available_prefill_policies()
     assert pol["decode"] == available_decode_policies()
     assert pol["router"] == available_router_policies()
+    assert pol["deflection"] == available_deflection_policies()
 
 
 def test_unknown_name_raises_with_known_names():

@@ -7,6 +7,13 @@ Prints ``name,us_per_call,derived`` CSV. Usage:
 perf record (the slice CI's bench-gate compares against the committed
 ``BENCH_workloads.json``); ``--bench-out`` redirects that record so a gate
 run never overwrites the baseline it is judging itself against.
+
+Event tracing (`repro.obs`) and these benchmarks: benchmark runs leave
+``HarnessConfig.trace`` at its ``None`` default, which keeps every emission
+site on its no-recorder fast path — the overhead guard in
+``tests/test_obs.py`` pins that a trace-enabled run is bit-identical in
+virtual time and adds no metric drift, so perf records stay comparable
+whether or not a diagnostic rerun traced the same cells.
 """
 from __future__ import annotations
 

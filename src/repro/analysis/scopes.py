@@ -34,6 +34,10 @@ CLOCK_SCOPE = Scope(
         "src/repro/policies/",
         "src/repro/workloads/",
         "src/repro/core/",
+        # observability must obey the same discipline: TraceRecorder never
+        # reads a clock — every timestamp is handed in by an emitting
+        # session that already read it from its injected Clock
+        "src/repro/obs/",
     ),
     exclude=("src/repro/serving/clock.py",),  # the injection boundary itself
 )
@@ -47,6 +51,7 @@ RNG_SCOPE = Scope(
         "src/repro/policies/",
         "src/repro/workloads/",
         "src/repro/core/",
+        "src/repro/obs/",
     ),
 )
 

@@ -66,8 +66,20 @@ def build_parser() -> argparse.ArgumentParser:
         help="engine per-tenant queued-request quota; 0 = no quota",
     )
     ap.add_argument(
-        "--trace", default=None,
-        help='JSONL trace file for the "replay" scenario',
+        "--replay-trace", default=None,
+        help='JSONL request-trace file for the "replay" scenario (input)',
+    )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="write a per-cell event trace (repro.obs): .jsonl = raw event "
+        "log, anything else = Chrome trace-event / Perfetto JSON; the cell "
+        "coordinates are spliced into the filename and each cell carries a "
+        '"trace" summary block in the report',
+    )
+    ap.add_argument(
+        "--slo-window", type=float, default=None, metavar="SECONDS",
+        help="with --trace: windowed SLO telemetry bucket width in backend "
+        "virtual seconds (adds a windows series to each trace block)",
     )
     ap.add_argument(
         "--clients", type=int, default=4,
@@ -132,9 +144,9 @@ def main(argv: Optional[List[str]] = None) -> dict:
 
     scenario_kwargs = {}
     if "replay" in args.scenario:
-        if args.trace is None:
-            ap.error('the "replay" scenario requires --trace <file.jsonl>')
-        scenario_kwargs["replay"] = {"path": args.trace}
+        if args.replay_trace is None:
+            ap.error('the "replay" scenario requires --replay-trace <file.jsonl>')
+        scenario_kwargs["replay"] = {"path": args.replay_trace}
 
     hcfg = HarnessConfig(
         n_requests=args.n,
@@ -152,6 +164,8 @@ def main(argv: Optional[List[str]] = None) -> dict:
         deflect_policy=args.deflect,
         transfer_bw=args.transfer_bw,
         transfer_lat=args.transfer_lat,
+        trace=args.trace,
+        slo_window=args.slo_window,
     )
     report = run_grid(
         scenarios=args.scenario,

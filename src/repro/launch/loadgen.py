@@ -48,11 +48,13 @@ from repro.policies import (
     available_policies,
     available_router_policies,
 )
+from repro.obs import TraceRecorder, trace_cell_block, write_trace
 from repro.workloads.harness import (
     HarnessConfig,
     _cell_report,
     _EngineBundle,
     _engine_setup,
+    _trace_path,
     disagg_cell_block,
     parse_pools,
     router_cell_block,
@@ -115,6 +117,9 @@ def run_loadgen(
         for srv in fleet:
             srv.clock = wall_clock if disagg else MonotonicClock()
     clients = max(1, hcfg.async_clients)
+    # same contract as the harness: None keeps every emission site on its
+    # fast path; "" records in memory without writing a file
+    recorder = TraceRecorder() if hcfg.trace is not None else None
 
     async def _serve():
         # the open-loop drive is (Async|Router|DisaggFleet)Session.replay —
@@ -130,6 +135,7 @@ def run_loadgen(
                 backpressure=hcfg.backpressure,
                 prefix_block=hcfg.prefix_block,
                 prefix_cache_blocks=hcfg.prefix_cache_blocks,
+                trace=recorder,
             )
         elif disagg:
             session = DisaggFleetSession(
@@ -139,12 +145,14 @@ def run_loadgen(
                 stream_buffer=hcfg.stream_buffer,
                 backpressure=hcfg.backpressure,
                 max_inflight_transfers=hcfg.max_inflight_transfers,
+                trace=recorder,
             )
         else:
             session = AsyncServeSession(
                 fleet[0],
                 stream_buffer=hcfg.stream_buffer,
                 backpressure=hcfg.backpressure,
+                trace=recorder,
             )
         async with session:
             await session.replay(pairs, clients=clients, on_client_token=on_tok)
@@ -174,6 +182,13 @@ def run_loadgen(
         cell["router"] = router_cell_block(session.summary())
     if disagg:
         cell["disagg"] = disagg_cell_block(session.core, [r for r, _ in pairs])
+    if recorder is not None:
+        trace_block = trace_cell_block(recorder.events, slo_window=hcfg.slo_window)
+        if hcfg.trace:
+            path = _trace_path(hcfg.trace, scenario, prefill, decode, backend)
+            trace_block["path"] = path
+            trace_block["format"] = write_trace(recorder.events, path)
+        cell["trace"] = trace_block
     return dict(
         grid=dict(
             scenarios=[scenario],
@@ -251,7 +266,19 @@ def build_parser() -> argparse.ArgumentParser:
         help="drive the engine on the wall clock instead of virtual time",
     )
     ap.add_argument(
-        "--trace", default=None, help='JSONL trace file for the "replay" scenario'
+        "--replay-trace", default=None,
+        help='JSONL request-trace file for the "replay" scenario (input)',
+    )
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="write an event trace of the run (repro.obs): .jsonl = raw "
+        "event log, anything else = Chrome trace-event / Perfetto JSON; "
+        'the cell gains a "trace" summary block',
+    )
+    ap.add_argument(
+        "--slo-window", type=float, default=None, metavar="SECONDS",
+        help="with --trace: windowed SLO telemetry bucket width in virtual "
+        "(or, with --realtime, wall) seconds",
     )
     ap.add_argument("--out", default=None, help="write the JSON report here (default stdout)")
     return ap
@@ -262,9 +289,9 @@ def main(argv: Optional[List[str]] = None) -> dict:
     args = ap.parse_args(argv)
     scenario_kwargs = None
     if args.scenario == "replay":
-        if args.trace is None:
-            ap.error('the "replay" scenario requires --trace <file.jsonl>')
-        scenario_kwargs = {"path": args.trace}
+        if args.replay_trace is None:
+            ap.error('the "replay" scenario requires --replay-trace <file.jsonl>')
+        scenario_kwargs = {"path": args.replay_trace}
 
     if args.pools is not None and (args.servers > 1 or args.router is not None):
         ap.error("--pools (disagg) and --servers/--router are mutually exclusive")
@@ -281,6 +308,8 @@ def main(argv: Optional[List[str]] = None) -> dict:
         deflect_policy=args.deflect,
         transfer_bw=args.transfer_bw,
         transfer_lat=args.transfer_lat,
+        trace=args.trace,
+        slo_window=args.slo_window,
     )
     report = run_loadgen(
         args.scenario, args.prefill, args.decode, hcfg,

@@ -1,0 +1,58 @@
+"""repro.obs — unified per-request event tracing and SLO telemetry.
+
+One typed event schema (`repro.obs.events`) emitted by every serving
+substrate — `DisaggSimulator`, `ServeSession`, `AsyncServeSession`,
+`RouterSession`, and the `DisaggSession` fleet — so a request's lifecycle
+(submit → admit/shed → prefill → KV handoff → decode steps → tokens →
+done/cancel) reads identically whichever backend served it. Exporters
+(`repro.obs.export`) turn the stream into JSONL or Chrome trace-event /
+Perfetto JSON; `repro.obs.slo` derives windowed TTFT/TPOT/e2e attainment,
+queue-depth and in-flight-transfer gauges, and the per-step
+decode-time-vs-TPOT-budget series — the live control signal the planned
+failover/autoscaling loop consumes. See DESIGN.md §obs.
+
+Clock discipline (RPA001): nothing in this package reads a clock. Every
+timestamp is handed to `TraceRecorder.emit` by the emitting session, which
+only ever passes values it already read from its injected `Clock` — so an
+enabled recorder cannot perturb scheduling, and a disabled one (the
+default, `trace=None`) costs nothing at all.
+"""
+from repro.obs.events import (
+    Event,
+    EventType,
+    TERMINAL_EVENTS,
+    TraceRecorder,
+    check_terminal_invariant,
+    counters_from_events,
+)
+from repro.obs.export import (
+    chrome_trace,
+    read_jsonl,
+    write_chrome_trace,
+    write_jsonl,
+    write_trace,
+)
+from repro.obs.slo import (
+    attainment_from_events,
+    per_request_timelines,
+    trace_cell_block,
+    windowed_slo,
+)
+
+__all__ = [
+    "Event",
+    "EventType",
+    "TERMINAL_EVENTS",
+    "TraceRecorder",
+    "attainment_from_events",
+    "check_terminal_invariant",
+    "chrome_trace",
+    "counters_from_events",
+    "per_request_timelines",
+    "read_jsonl",
+    "trace_cell_block",
+    "windowed_slo",
+    "write_chrome_trace",
+    "write_jsonl",
+    "write_trace",
+]

@@ -51,6 +51,7 @@ import jax
 import numpy as np
 
 from repro.core.request import Phase, Request
+from repro.obs.events import EventType, TraceRecorder
 from repro.policies import PolicySpec, make_deflection
 from repro.serving.engine import DisaggServer, LiveRequest
 from repro.serving.frontend import AsyncServeSession
@@ -178,6 +179,8 @@ class DisaggSession:
         tenant_queue_depth: Any = FROM_CONFIG,
         on_token: Optional[TokenCallback] = None,
         max_inflight_transfers: int = 8,
+        trace: Optional[TraceRecorder] = None,
+        trace_label: str = "fleet",
     ):
         if not prefill_servers or not decode_servers:
             raise ValueError("disagg fleet needs >= 1 prefill and >= 1 decode server")
@@ -217,6 +220,12 @@ class DisaggSession:
         self._decode_worker_of: Dict[int, str] = {}
         self.on_token = on_token
         self._callbacks: Dict[int, TokenCallback] = {}
+        # observability (repro.obs): one recorder shared by every worker,
+        # each event stamped with the emitting worker's pool label
+        # ("prefill:0" / "decode:1"); session-level events (SUBMIT) carry
+        # `trace_label`. None = tracing off.
+        self.trace = trace
+        self.trace_label = trace_label
 
     # --------------------------------------------------------- fleet view
     def decode_has_capacity(self) -> bool:
@@ -290,6 +299,16 @@ class DisaggSession:
         m.submitted += 1
         m._bump(m.submitted_by_tenant, request.tenant)
         self.requests.append(request)
+        tr = self.trace
+        if tr is not None:
+            # t = declared arrival — submit paths never read the fleet clock
+            tr.emit(
+                EventType.SUBMIT, request.arrival, rid=request.rid,
+                tenant=request.tenant, pool=self.trace_label,
+                arrival=request.arrival, input_len=request.input_len,
+                output_len=request.output_len, slo_ttft=request.slo.ttft,
+                slo_tpot=request.slo.tpot, slo_class=request.slo_class,
+            )
         deflected = self.deflect.decide(self, request, prompt)
         target = (
             self._pick_deflection_worker()
@@ -313,11 +332,33 @@ class DisaggSession:
                 m.rejected_tenant += 1
             m.rejected_rids.append(request.rid)
             m._bump(m.rejected_by_tenant, request.tenant)
+            if tr is not None:
+                tr.emit(
+                    EventType.SHED, request.arrival, rid=request.rid,
+                    tenant=request.tenant, pool=target.label,
+                    scope="global" if shed_global else "tenant",
+                    queue_depth=target.queue_len,
+                )
             return False
         m.accepted += 1
+        if tr is not None and deflected:
+            # DEFLECT precedes ADMIT: the placement decision is made before
+            # the worker's queue accepts the request (only accepted requests
+            # count as deflected — a deflected-then-shed one does not)
+            tr.emit(
+                EventType.DEFLECT, request.arrival, rid=request.rid,
+                tenant=request.tenant, pool=target.label,
+                policy=self.deflect.name,
+            )
         target.queue.append(LiveRequest(req=request, tokens=list(prompt)))
         target.assigned += 1
         self._prefill_worker_of[request.rid] = target.label
+        if tr is not None:
+            tr.emit(
+                EventType.ADMIT, request.arrival, rid=request.rid,
+                tenant=request.tenant, pool=target.label,
+                queue_depth=target.queue_len,
+            )
         if deflected:
             self.deflected += 1
             self.deflected_rids.append(request.rid)
@@ -338,20 +379,21 @@ class DisaggSession:
                 if lr.req.rid == rid:
                     w.queue.remove(lr)
                     lr.prefill_cache = None
-                    self._finish_cancel(lr)
+                    self._finish_cancel(lr, "queue", w.label)
                     return True
             for lr in w.active:
                 if lr.req.rid == rid:
                     w.active.remove(lr)
+                    slot = lr.slot
                     w.server.decode.release(lr)
-                    self._finish_cancel(lr)
+                    self._finish_cancel(lr, "decode", w.label, slot=slot)
                     return True
         for tr in self.pending_handoff:
             if tr.lr.req.rid == rid:
                 self.pending_handoff.remove(tr)
                 tr.lr.prefill_cache = None
                 self.handoff.transfers_cancelled += 1
-                self._finish_cancel(tr.lr)
+                self._finish_cancel(tr.lr, "handoff", tr.src.label)
                 return True
         for tr in self.inflight:
             if tr.lr.req.rid == rid:
@@ -359,11 +401,13 @@ class DisaggSession:
                 tr.dst.server.decode.release(tr.lr)  # reserved at start
                 tr.lr.prefill_cache = None
                 self.handoff.transfers_cancelled += 1
-                self._finish_cancel(tr.lr)
+                self._finish_cancel(tr.lr, "inflight", tr.dst.label)
                 return True
         return False
 
-    def _finish_cancel(self, lr: LiveRequest) -> None:
+    def _finish_cancel(
+        self, lr: LiveRequest, stage: str, pool: str, slot: Optional[int] = None
+    ) -> None:
         lr.req.phase = Phase.CANCELLED
         lr.req.done_time = self.server._now()
         self._callbacks.pop(lr.req.rid, None)
@@ -371,6 +415,13 @@ class DisaggSession:
         m.cancelled += 1
         m.cancelled_rids.append(lr.req.rid)
         m._bump(m.cancelled_by_tenant, lr.req.tenant)
+        if self.trace is not None:
+            # every cancel path funnels here, so a cancel — mid-handoff
+            # included — emits exactly one terminal event
+            self.trace.emit(
+                EventType.CANCEL, lr.req.done_time, rid=lr.req.rid,
+                tenant=lr.req.tenant, pool=pool, slot=slot, stage=stage,
+            )
 
     # -------------------------------------------------------------- state
     @property
@@ -414,6 +465,12 @@ class DisaggSession:
         tr.lr.transfer_ready_at = tr.ready_at
         self.inflight.append(tr)
         self._decode_worker_of[tr.lr.req.rid] = dst.label
+        if self.trace is not None:
+            self.trace.emit(
+                EventType.HANDOFF_START, at, rid=tr.lr.req.rid,
+                tenant=tr.lr.req.tenant, pool=dst.label, slot=tr.lr.slot,
+                src=tr.src.label, ready_at=tr.ready_at,
+            )
         h = self.handoff
         h.transfers_started += 1
         if dst is tr.src:
@@ -429,6 +486,11 @@ class DisaggSession:
 
     def _enqueue_handoff(self, lr: LiveRequest, src: PoolWorker, at: float) -> None:
         tr = _Transfer(lr=lr, src=src, queued_at=at)
+        if self.trace is not None:
+            self.trace.emit(
+                EventType.HANDOFF_QUEUED, at, rid=lr.req.rid,
+                tenant=lr.req.tenant, pool=src.label,
+            )
         if not self._start_transfer(tr, at):
             self.pending_handoff.append(tr)
             self.handoff.queued_peak = max(
@@ -452,6 +514,7 @@ class DisaggSession:
         # ---- prefill stage: the prefill pool, then deflected prompts on
         # decode workers (a deflected prefill runs the same chunked loop,
         # just on a decode server's prefill engine)
+        trc = self.trace
         for w in (*self.prefill_pool, *self.decode_pool):
             if not w.queue:
                 continue
@@ -462,6 +525,11 @@ class DisaggSession:
             total = 0
             for req, take in sel:
                 lr = next(l for l in w.queue if l.req is req)
+                if trc is not None and req.prefilled_tokens == 0:
+                    trc.emit(
+                        EventType.PREFILL_START, now, rid=req.rid,
+                        tenant=req.tenant, pool=w.label, take=take,
+                    )
                 logits = srv.prefill.run_chunk(lr, take)
                 total += take
                 if logits is not None:
@@ -474,7 +542,18 @@ class DisaggSession:
                     req.token_times.append(fin)
                     req.phase = Phase.TRANSFER
                     w.queue.remove(lr)
+                    if trc is not None:
+                        trc.emit(
+                            EventType.PREFILL_END, fin, rid=req.rid,
+                            tenant=req.tenant, pool=w.label,
+                            queue_depth=len(w.queue),
+                        )
                     self._enqueue_handoff(lr, w, fin)
+                    if trc is not None:
+                        trc.emit(
+                            EventType.TOKEN, fin, rid=req.rid,
+                            tenant=req.tenant, pool=w.label,
+                        )
                     self._emit(req, tok, fin)
             elapsed = (clock.monotonic() - t0) * ecfg.time_scale
             if total:
@@ -493,6 +572,12 @@ class DisaggSession:
             tr.dst.active.append(lr)
             self.handoff.transfers_completed += 1
             admitted = True
+            if trc is not None:
+                trc.emit(
+                    EventType.HANDOFF_ATTACH, lr.req.decode_start,
+                    rid=lr.req.rid, tenant=lr.req.tenant,
+                    pool=tr.dst.label, slot=lr.slot,
+                )
         # retry queued handoffs (window room / slots may have freed); each
         # may target a different worker, so later entries aren't blocked by
         # an earlier one waiting on a different destination
@@ -515,6 +600,13 @@ class DisaggSession:
             step_t = (clock.monotonic() - t0) * ecfg.time_scale
             tend = srv._now()
             srv.decode_sched.observe([l.req for l in batch], step_t)
+            if trc is not None and batch:
+                trc.emit(
+                    EventType.DECODE_STEP, tend, pool=w.label,
+                    batch=len(batch), step_time=step_t,
+                    active=len(w.active),
+                    tpot_budget=min(l.req.slo.tpot for l in batch),
+                )
             for lr, tok in zip(batch, toks, strict=True):
                 r = lr.req
                 tok = int(tok)
@@ -522,6 +614,11 @@ class DisaggSession:
                 r.n_generated += 1
                 r.n_decoded += 1
                 r.token_times.append(tend)
+                if trc is not None:
+                    trc.emit(
+                        EventType.TOKEN, tend, rid=r.rid, tenant=r.tenant,
+                        pool=w.label, slot=lr.slot,
+                    )
                 self._emit(r, tok, tend)
                 done = (
                     tok == ecfg.eos_token
@@ -531,11 +628,17 @@ class DisaggSession:
                 if done:
                     r.phase = Phase.DONE
                     r.done_time = tend
+                    slot = lr.slot
                     srv.decode.release(lr)
                     w.active.remove(lr)
                     self.metrics.completed += 1
                     self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
                     completed.append(r.rid)
+                    if trc is not None:
+                        trc.emit(
+                            EventType.DONE, tend, rid=r.rid, tenant=r.tenant,
+                            pool=w.label, slot=slot, n_generated=r.n_generated,
+                        )
 
         # when the only remaining work is KV on the wire, nudge the clock
         # toward the earliest ready_at — same rule as `ServeSession.step`
@@ -643,6 +746,7 @@ class DisaggFleetSession(AsyncServeSession):
         backpressure: str = "block",
         idle_wait: float = 0.001,
         max_inflight_transfers: int = 8,
+        trace: Optional[TraceRecorder] = None,
     ):
         core = DisaggSession(
             prefill_servers,
@@ -651,6 +755,7 @@ class DisaggFleetSession(AsyncServeSession):
             max_queue_depth=max_queue_depth,
             tenant_queue_depth=tenant_queue_depth,
             max_inflight_transfers=max_inflight_transfers,
+            trace=trace,
         )
         super().__init__(
             core.server,  # unused when a session is injected; kept for repr

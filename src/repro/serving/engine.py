@@ -15,7 +15,7 @@ DESIGN.md §engine-scope.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,9 @@ import numpy as np
 from repro.core.lut import StepTimeLUT
 from repro.core.predictor import PrefillThroughputEstimator
 from repro.core.request import Request
+
+if TYPE_CHECKING:  # import for annotation only: engine stays obs-free
+    from repro.obs.events import TraceRecorder
 from repro.models.model import Model
 from repro.models.transformer import chunk_prefill_step, decode_step
 from repro.policies import PolicySpec, make_decode, make_prefill
@@ -203,9 +206,14 @@ class DisaggServer:
         params: Dict,
         ecfg: EngineConfig,
         clock: Optional[Clock] = None,
+        trace: Optional["TraceRecorder"] = None,
     ):
         self.model, self.ecfg = model, ecfg
         self.clock: Clock = clock if clock is not None else MonotonicClock()
+        # default trace sink for sessions built over this server (see
+        # repro.obs): ServeSession picks it up via getattr, so an offline
+        # `serve()` call traces without the caller threading a recorder
+        self.trace = trace
         self.prefill = PrefillEngine(model, params, ecfg)
         self.decode = DecodeEngine(model, params, ecfg)
         # schedulers come from the shared policy registry — the same specs

@@ -49,6 +49,7 @@ import heapq
 from typing import Any, AsyncIterator, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.request import TERMINAL_PHASES, Phase, Request
+from repro.obs.events import EventType
 from repro.serving.engine import DisaggServer
 from repro.serving.session import FROM_CONFIG, ServeSession, SessionMetrics
 
@@ -222,6 +223,8 @@ class AsyncServeSession:
         idle_wait: float = 0.001,
         prefix_cache: Optional[Any] = None,
         session: Optional[Any] = None,
+        trace: Optional[Any] = None,
+        trace_label: str = "engine:0",
     ):
         if backpressure not in BACKPRESSURE_POLICIES:
             raise ValueError(
@@ -243,6 +246,8 @@ class AsyncServeSession:
                 tenant_queue_depth=tenant_queue_depth,
                 on_token=self._collect_token,
                 prefix_cache=prefix_cache,
+                trace=trace,
+                trace_label=trace_label,
             )
         self.stream_buffer = stream_buffer
         self.backpressure = backpressure
@@ -355,6 +360,25 @@ class AsyncServeSession:
             m.cancelled_rids.append(req.rid)
             m._bump(m.cancelled_by_tenant, req.tenant)
             self.session.requests.append(req)
+            tr = getattr(self.session, "trace", None)
+            if tr is not None:
+                # this path bypasses session.submit/cancel, so it must emit
+                # the same SUBMIT + CANCEL pair itself or the event-derived
+                # counters would diverge from SessionMetrics (pre-admission
+                # cancels count as submitted+cancelled). No clock read: the
+                # declared arrival timestamps both, like session.submit.
+                lbl = getattr(self.session, "trace_label", "")
+                tr.emit(
+                    EventType.SUBMIT, req.arrival, rid=req.rid,
+                    tenant=req.tenant, pool=lbl, arrival=req.arrival,
+                    input_len=req.input_len, output_len=req.output_len,
+                    slo_ttft=req.slo.ttft, slo_tpot=req.slo.tpot,
+                    slo_class=req.slo_class,
+                )
+                tr.emit(
+                    EventType.CANCEL, req.arrival, rid=req.rid,
+                    tenant=req.tenant, pool=lbl, stage="pre-admission",
+                )
         intent.handle.cancel_reason = "client"
         intent.handle._resolve_admission(False)
 
@@ -503,9 +527,23 @@ class AsyncServeSession:
                     intent.handle._resolve_admission(False)
             self._submit_intents.clear()
             self._scheduled.clear()
+            tr = getattr(self.session, "trace", None)
+            lbl = getattr(self.session, "trace_label", "")
             for h in self._handles.values():
                 h.cancel_reason = h.cancel_reason or "error"
                 h._close_now()
+                if tr is not None and h.request.phase not in TERMINAL_PHASES:
+                    # crash containment tears the request down without going
+                    # through cancel(): FAIL is its single terminal event.
+                    # No clock read — stamp with the request's last known
+                    # event time (the run is dead; parity is moot, the
+                    # one-terminal invariant is not).
+                    req = h.request
+                    t = req.token_times[-1] if req.token_times else req.arrival
+                    tr.emit(
+                        EventType.FAIL, t, rid=req.rid, tenant=req.tenant,
+                        pool=lbl, reason="stepper-crash",
+                    )
             self._handles.clear()
             self._drained.set()
             raise

@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.request import TERMINAL_PHASES, Request
+from repro.obs.events import EventType, TraceRecorder
 from repro.policies import PolicySpec, make_router
 from repro.serving.engine import DisaggServer
 from repro.serving.frontend import AsyncServeSession, RequestHandle, drive_replay
@@ -109,11 +110,15 @@ class RouterSession:
         backpressure: str = "block",
         prefix_block: int = DEFAULT_PREFIX_BLOCK,
         prefix_cache_blocks: Optional[int] = None,
+        trace: Optional[TraceRecorder] = None,
     ):
         if not servers:
             raise ValueError("RouterSession needs at least one server")
         self.policy = make_router(policy)
         self.prefix_block = prefix_block
+        # one shared recorder across all replicas: each replica stamps its
+        # own pool label ("replica:i"), so the fleet shares one timeline
+        self.trace = trace
         self.replicas: List[ReplicaState] = [
             ReplicaState(
                 index=i,
@@ -126,6 +131,8 @@ class RouterSession:
                     prefix_cache=PrefixCache(
                         block=prefix_block, max_blocks=prefix_cache_blocks
                     ),
+                    trace=trace,
+                    trace_label=f"replica:{i}",
                 ),
                 route_index=PrefixCache(
                     block=prefix_block, max_blocks=prefix_cache_blocks
@@ -195,6 +202,16 @@ class RouterSession:
         rep.routed.append(request)
         self._owner[request.rid] = idx
         self._handles[request.rid] = handle
+        if self.trace is not None:
+            # routing happens before the replica stepper runs admission, so
+            # ROUTE precedes the rid's SUBMIT in the shared timeline. No
+            # clock read: stamped with the scheduled submission time.
+            self.trace.emit(
+                EventType.ROUTE,
+                request.arrival if at is None else at,
+                rid=request.rid, tenant=request.tenant,
+                pool=f"replica:{idx}", policy=self.policy.name,
+            )
         return handle
 
     def cancel(self, rid: int) -> bool:

@@ -42,6 +42,7 @@ import jax
 import numpy as np
 
 from repro.core.request import Phase, Request
+from repro.obs.events import EventType, TraceRecorder
 from repro.serving.engine import DisaggServer, LiveRequest
 from repro.serving.prefixcache import PrefixCache
 
@@ -106,8 +107,17 @@ class ServeSession:
         on_token: Optional[TokenCallback] = None,
         tenant_queue_depth: Optional[int] = FROM_CONFIG,
         prefix_cache: Optional["PrefixCache"] = None,
+        trace: Optional[TraceRecorder] = None,
+        trace_label: str = "engine:0",
     ):
         self.server = server
+        # observability (repro.obs): None = tracing off, the default — the
+        # disabled path is a single `is not None` test per emission point.
+        # Emissions only ever reuse timestamps this session already read
+        # from the injected clock, so enabling a recorder cannot perturb
+        # ManualClock schedules (pinned in tests/test_obs.py).
+        self.trace = trace if trace is not None else getattr(server, "trace", None)
+        self.trace_label = trace_label
         self.ecfg = server.ecfg
         if max_queue_depth is FROM_CONFIG:
             max_queue_depth = server.ecfg.admission_queue_depth
@@ -150,6 +160,18 @@ class ServeSession:
         m.submitted += 1
         m._bump(m.submitted_by_tenant, request.tenant)
         self.requests.append(request)
+        tr = self.trace
+        if tr is not None:
+            # t = declared arrival: submission never reads the clock, and an
+            # emission must not either (ManualClock.auto_step advances per
+            # monotonic() read — a new read here would shift every schedule)
+            tr.emit(
+                EventType.SUBMIT, request.arrival, rid=request.rid,
+                tenant=request.tenant, pool=self.trace_label,
+                arrival=request.arrival, input_len=request.input_len,
+                output_len=request.output_len, slo_ttft=request.slo.ttft,
+                slo_tpot=request.slo.tpot, slo_class=request.slo_class,
+            )
         shed_global = (
             self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth
         )
@@ -166,8 +188,16 @@ class ServeSession:
                 m.rejected_tenant += 1
             m.rejected_rids.append(request.rid)
             m._bump(m.rejected_by_tenant, request.tenant)
+            if tr is not None:
+                tr.emit(
+                    EventType.SHED, request.arrival, rid=request.rid,
+                    tenant=request.tenant, pool=self.trace_label,
+                    scope="global" if shed_global else "tenant",
+                    queue_depth=len(self.queue),
+                )
             return False
         m.accepted += 1
+        prefix_kw: Dict[str, int] = {}
         if self.prefix_cache is not None:
             # admitted prompts only enter the trie: a shed prompt's KV never
             # materializes, so indexing it would advertise phantom reuse
@@ -178,7 +208,14 @@ class ServeSession:
             m.prefix_hit_tokens += hit
             if hit:
                 m.prefix_hits += 1
+            prefix_kw = dict(prefix_eligible=eligible, prefix_hit=hit)
         self.queue.append(LiveRequest(req=request, tokens=list(prompt)))
+        if tr is not None:
+            tr.emit(
+                EventType.ADMIT, request.arrival, rid=request.rid,
+                tenant=request.tenant, pool=self.trace_label,
+                queue_depth=len(self.queue), **prefix_kw,
+            )
         if on_token is not None:
             self._callbacks[request.rid] = on_token
         return True
@@ -195,10 +232,12 @@ class ServeSession:
         keep the two apart). Returns False if ``rid`` is not in flight
         (already terminal, shed, or unknown) — cancelling twice is a no-op.
         """
-        for lst in (self.queue, self.waiting_adm, self.active):
+        stages = ("queue", "transfer", "decode")
+        for lst, stage in zip((self.queue, self.waiting_adm, self.active), stages, strict=True):
             for lr in lst:
                 if lr.req.rid == rid:
                     lst.remove(lr)
+                    slot = lr.slot
                     self.server.decode.release(lr)
                     lr.prefill_cache = None
                     lr.req.phase = Phase.CANCELLED
@@ -208,6 +247,12 @@ class ServeSession:
                     m.cancelled += 1
                     m.cancelled_rids.append(rid)
                     m._bump(m.cancelled_by_tenant, lr.req.tenant)
+                    if self.trace is not None:
+                        self.trace.emit(
+                            EventType.CANCEL, lr.req.done_time, rid=rid,
+                            tenant=lr.req.tenant, pool=self.trace_label,
+                            slot=slot, stage=stage,
+                        )
                     return True
         return False
 
@@ -234,6 +279,7 @@ class ServeSession:
         now = srv._now()
 
         # ---- prefill side ------------------------------------------------
+        tr = self.trace
         pq = [lr.req for lr in self.queue]
         if pq:
             sel = srv.prefill_sched.select(pq, now, srv.mu.mu, ecfg.chunk_size)
@@ -241,6 +287,13 @@ class ServeSession:
             total = 0
             for req, take in sel:
                 lr = next(l for l in self.queue if l.req is req)
+                if tr is not None and req.prefilled_tokens == 0:
+                    # first chunk of this request's prefill (t = the round's
+                    # already-read `now`; no extra clock read)
+                    tr.emit(
+                        EventType.PREFILL_START, now, rid=req.rid,
+                        tenant=req.tenant, pool=self.trace_label, take=take,
+                    )
                 logits = srv.prefill.run_chunk(lr, take)
                 total += take
                 if logits is not None:
@@ -257,6 +310,29 @@ class ServeSession:
                     lr.transfer_ready_at = fin + srv.cost.transfer_time(req.input_len)
                     self.queue.remove(lr)
                     self.waiting_adm.append(lr)
+                    if tr is not None:
+                        lbl = self.trace_label
+                        tr.emit(
+                            EventType.PREFILL_END, fin, rid=req.rid,
+                            tenant=req.tenant, pool=lbl,
+                            queue_depth=len(self.queue),
+                        )
+                        # single-server handoff: the KV goes on the wire the
+                        # moment prefill finishes (no bounded in-flight
+                        # window), so QUEUED and START coincide at `fin`
+                        tr.emit(
+                            EventType.HANDOFF_QUEUED, fin, rid=req.rid,
+                            tenant=req.tenant, pool=lbl,
+                        )
+                        tr.emit(
+                            EventType.HANDOFF_START, fin, rid=req.rid,
+                            tenant=req.tenant, pool=lbl,
+                            ready_at=lr.transfer_ready_at,
+                        )
+                        tr.emit(
+                            EventType.TOKEN, fin, rid=req.rid,
+                            tenant=req.tenant, pool=lbl,
+                        )
                     self._emit(req, tok, fin)
             elapsed = (clock.monotonic() - t0) * ecfg.time_scale
             if total:
@@ -273,6 +349,12 @@ class ServeSession:
                 self.waiting_adm.remove(lr)
                 self.active.append(lr)
                 admitted = True
+                if tr is not None:
+                    tr.emit(
+                        EventType.HANDOFF_ATTACH, lr.req.decode_start,
+                        rid=lr.req.rid, tenant=lr.req.tenant,
+                        pool=self.trace_label, slot=lr.slot,
+                    )
 
         # ---- decode side -------------------------------------------------
         if self.active:
@@ -286,6 +368,16 @@ class ServeSession:
             step_t = (clock.monotonic() - t0) * ecfg.time_scale
             tend = srv._now()
             srv.decode_sched.observe([l.req for l in batch], step_t)
+            if tr is not None and batch:
+                # pool-level step record (rid = -1): the batch the decode
+                # scheduler packed, the engine step time, and the tightest
+                # TPOT budget in the batch — obs/slo.py's budget series
+                tr.emit(
+                    EventType.DECODE_STEP, tend, pool=self.trace_label,
+                    batch=len(batch), step_time=step_t,
+                    active=len(self.active),
+                    tpot_budget=min(l.req.slo.tpot for l in batch),
+                )
             for lr, tok in zip(batch, toks, strict=True):
                 r = lr.req
                 tok = int(tok)
@@ -293,6 +385,11 @@ class ServeSession:
                 r.n_generated += 1
                 r.n_decoded += 1
                 r.token_times.append(tend)
+                if tr is not None:
+                    tr.emit(
+                        EventType.TOKEN, tend, rid=r.rid, tenant=r.tenant,
+                        pool=self.trace_label, slot=lr.slot,
+                    )
                 self._emit(r, tok, tend)
                 done = (
                     tok == ecfg.eos_token
@@ -302,11 +399,18 @@ class ServeSession:
                 if done:
                     r.phase = Phase.DONE
                     r.done_time = tend
+                    slot = lr.slot
                     srv.decode.release(lr)
                     self.active.remove(lr)
                     self.metrics.completed += 1
                     self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
                     completed.append(r.rid)
+                    if tr is not None:
+                        tr.emit(
+                            EventType.DONE, tend, rid=r.rid, tenant=r.tenant,
+                            pool=self.trace_label, slot=slot,
+                            n_generated=r.n_generated,
+                        )
 
         # when the only remaining work is KV on the wire, nudge the clock
         # toward the earliest transfer_ready_at so virtual-clock drivers

@@ -21,6 +21,7 @@ from repro.core.lut import StepTimeLUT
 from repro.core.pacer import DeliveryPacer
 from repro.core.predictor import PrefillThroughputEstimator
 from repro.core.request import Phase, Request
+from repro.obs.events import EventType, TraceRecorder
 from repro.policies import PolicySpec, make_decode, make_prefill
 from repro.sim.costmodel import CalibratedCostModel, PAPER_COST_MODEL
 
@@ -72,6 +73,8 @@ class DisaggSimulator:
         sim_cfg: Optional[SimConfig] = None,
         fault_plan: Optional[FaultPlan] = None,
         lut: Optional[StepTimeLUT] = None,
+        trace: Optional[TraceRecorder] = None,
+        trace_label: str = "sim",
     ):
         if sim_cfg is None:
             sim_cfg = SimConfig()
@@ -90,6 +93,12 @@ class DisaggSimulator:
         self.decode_sched = make_decode(decode_policy, self.lut)
         self.mu = PrefillThroughputEstimator(mu=cost.prefill_throughput_seed())
         self.pacer = DeliveryPacer(mode=sim_cfg.pacer_mode)
+        # observability (repro.obs): None = tracing off. The simulator emits
+        # the SAME event schema as the live backends at its cost-model
+        # timestamps, so event-level parity with the engine can be asserted
+        # (tests/test_obs_parity.py). Emissions never touch the timeline.
+        self.trace = trace
+        self.trace_label = trace_label
 
     # ------------------------------------------------------------------ run
     def run(self, requests: Sequence[Request]) -> SimResult:
@@ -113,11 +122,28 @@ class DisaggSimulator:
         faults = list(self.faults)
         decode_down_until = -1.0
 
+        tr = self.trace
+        lbl = self.trace_label
+
         def inject(up_to: float):
             nonlocal arr_i
             while arr_i < n and reqs[arr_i].arrival <= up_to:
-                prefill_q.append(reqs[arr_i])
+                r = reqs[arr_i]
+                prefill_q.append(r)
                 arr_i += 1
+                if tr is not None:
+                    # the sim has no admission control: every arrival is
+                    # SUBMIT + ADMIT at its declared arrival time
+                    tr.emit(
+                        EventType.SUBMIT, r.arrival, rid=r.rid, tenant=r.tenant,
+                        pool=lbl, arrival=r.arrival, input_len=r.input_len,
+                        output_len=r.output_len, slo_ttft=r.slo.ttft,
+                        slo_tpot=r.slo.tpot, slo_class=r.slo_class,
+                    )
+                    tr.emit(
+                        EventType.ADMIT, r.arrival, rid=r.rid, tenant=r.tenant,
+                        pool=lbl, queue_depth=len(prefill_q),
+                    )
 
         def noisy(t: float) -> float:
             if cfg.step_noise_sigma > 0:
@@ -142,6 +168,11 @@ class DisaggSimulator:
                     r.phase = Phase.DECODE
                     r.decode_start = now
                     active.append(r)
+                    if tr is not None:
+                        tr.emit(
+                            EventType.HANDOFF_ATTACH, now, rid=r.rid,
+                            tenant=r.tenant, pool=lbl,
+                        )
                 else:
                     still.append(r)
             wait_adm[:] = still
@@ -214,8 +245,26 @@ class DisaggSimulator:
         return res
 
     # --------------------------------------------------------------- prefill
+    def _emit_prefill_finish(self, r: Request, t_end: float, ready: float, depth: int) -> None:
+        """PREFILL_END -> HANDOFF_QUEUED -> HANDOFF_START -> TOKEN at t_end —
+        the exact order `ServeSession.step` emits on prefill completion, so
+        the sequences compare equal modulo the pool tag."""
+        tr = self.trace
+        lbl = self.trace_label
+        tr.emit(
+            EventType.PREFILL_END, t_end, rid=r.rid, tenant=r.tenant,
+            pool=lbl, queue_depth=depth,
+        )
+        tr.emit(EventType.HANDOFF_QUEUED, t_end, rid=r.rid, tenant=r.tenant, pool=lbl)
+        tr.emit(
+            EventType.HANDOFF_START, t_end, rid=r.rid, tenant=r.tenant,
+            pool=lbl, ready_at=ready,
+        )
+        tr.emit(EventType.TOKEN, t_end, rid=r.rid, tenant=r.tenant, pool=lbl)
+
     def _prefill_step(self, tp, td, prefill_q, transfer, res):
         cfg, cost = self.cfg, self.cost
+        tr = self.trace
         queue = [r for r in prefill_q if r.arrival <= tp and not r.prefill_done]
         if not queue:
             future = [r.arrival for r in prefill_q if not r.prefill_done]
@@ -231,7 +280,14 @@ class DisaggSimulator:
                 r.phase = Phase.TRANSFER
                 prefill_q.remove(r)
                 queue.remove(r)
-                transfer.append((tp + cost.transfer_time(r.input_len), r))
+                ready = tp + cost.transfer_time(r.input_len)
+                transfer.append((ready, r))
+                if tr is not None:
+                    tr.emit(
+                        EventType.PREFILL_START, tp, rid=r.rid,
+                        tenant=r.tenant, pool=self.trace_label, take=0,
+                    )
+                    self._emit_prefill_finish(r, tp, ready, len(prefill_q))
         if not queue:
             return tp, td
         sel = self.prefill_sched.select(queue, tp, self.mu.mu, cfg.chunk_size)
@@ -240,6 +296,11 @@ class DisaggSimulator:
             return tp, td
         chunks = []
         for r, take in sel:
+            if tr is not None and r.prefilled_tokens == 0:
+                tr.emit(
+                    EventType.PREFILL_START, tp, rid=r.rid, tenant=r.tenant,
+                    pool=self.trace_label, take=take,
+                )
             r.phase = Phase.PREFILL
             offset = r.prefix_cached_tokens + r.prefilled_tokens
             chunks.append((take, offset))
@@ -258,6 +319,8 @@ class DisaggSimulator:
                 prefill_q.remove(r)
                 ready = t_end + cost.transfer_time(r.input_len)
                 transfer.append((ready, r))
+                if tr is not None:
+                    self._emit_prefill_finish(r, t_end, ready, len(prefill_q))
         self.mu.update(total, step_t)
         res.prefill_busy += step_t
         return t_end, td
@@ -282,16 +345,31 @@ class DisaggSimulator:
         else:
             res.full_steps += 1
         res.max_active = max(res.max_active, len(active))
+        tr = self.trace
+        lbl = self.trace_label
+        if tr is not None and batch:
+            tr.emit(
+                EventType.DECODE_STEP, t_end, pool=lbl,
+                batch=len(batch), step_time=step_t, active=len(active),
+                tpot_budget=min(r.slo.tpot for r in batch),
+            )
         for r in batch:
             r.n_generated += 1
             r.n_decoded += 1
             r.token_times.append(t_end)
+            if tr is not None:
+                tr.emit(EventType.TOKEN, t_end, rid=r.rid, tenant=r.tenant, pool=lbl)
             if r.decode_done:
                 r.phase = Phase.DONE
                 r.done_time = t_end
                 active.remove(r)
                 kv_used -= r.input_len + r.output_len
                 done += 1
+                if tr is not None:
+                    tr.emit(
+                        EventType.DONE, t_end, rid=r.rid, tenant=r.tenant,
+                        pool=lbl, n_generated=r.n_generated,
+                    )
         self.decode_sched.observe(batch, step_t)
         res.decode_busy += step_t
         res.decode_steps += 1
@@ -306,11 +384,14 @@ def run_policy(
     cost: CalibratedCostModel = PAPER_COST_MODEL,
     sim_cfg: Optional[SimConfig] = None,
     fault_plan: Optional[FaultPlan] = None,
+    trace: Optional[TraceRecorder] = None,
 ) -> SimResult:
     import copy
 
     reqs = copy.deepcopy(list(requests))
-    sim = DisaggSimulator(cost, prefill_policy, decode_policy, sim_cfg, fault_plan)
+    sim = DisaggSimulator(
+        cost, prefill_policy, decode_policy, sim_cfg, fault_plan, trace=trace
+    )
     return sim.run(reqs)
 
 

@@ -57,6 +57,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.request import Phase, Request, SLOSpec
+from repro.obs import TraceRecorder, trace_cell_block, write_trace
 from repro.sim.metrics import attainment, attainment_by, goodput
 from repro.sim.simulator import SimConfig, run_policy
 from repro.workloads.scenarios import make_scenario
@@ -135,6 +136,16 @@ class HarnessConfig:
     transfer_lat: float = 0.002
     transfer_bw: float = 900e9
     max_inflight_transfers: int = 8
+    # observability (repro.obs): event-trace output. None = tracing off (the
+    # default recorder is absent, so no per-event cost at all); "" = record
+    # in memory and attach the cell's ``trace`` block but write no file; a
+    # path = also export per cell (".jsonl" -> event JSONL, anything else ->
+    # Chrome trace-event / Perfetto JSON), with a per-cell suffix so grid
+    # cells never clobber each other. ``slo_window`` is the sliding-window
+    # width in backend virtual seconds for the trace block's windowed SLO
+    # series (None = omit the series).
+    trace: Optional[str] = None
+    slo_window: Optional[float] = None
 
     def as_dict(self) -> Dict:
         # the report's run-identity block: every knob (asdict recurses into
@@ -262,8 +273,11 @@ def _cell_report(reqs: Sequence[Request]) -> Dict:
     )
 
 
-def _run_sim(reqs, prefill: str, decode: str, hcfg: HarnessConfig) -> List[Request]:
-    res = run_policy(reqs, prefill, decode, sim_cfg=hcfg.sim)
+def _run_sim(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig,
+    trace: Optional[TraceRecorder] = None,
+) -> List[Request]:
+    res = run_policy(reqs, prefill, decode, sim_cfg=hcfg.sim, trace=trace)
     return res.requests
 
 
@@ -275,6 +289,7 @@ def _engine_setup(
     bundle: _EngineBundle,
     n_servers: int = 1,
     shared_clock: bool = False,
+    trace: Optional[TraceRecorder] = None,
 ):
     """Shared (engine | async-engine | router | disagg) setup: request twins
     plus ``n_servers`` fresh servers, each on its own deterministic
@@ -308,6 +323,11 @@ def _engine_setup(
             bundle.params,
             ecfg,
             clock=fleet_clock if shared_clock else ManualClock(auto_step=1e-4),
+            # server-level default sink, picked up by the single-server
+            # sessions; the fleet backends instead hand the recorder to
+            # their session layer (which stamps per-replica / per-pool
+            # labels), so they build servers without one
+            trace=trace,
         )
         for _ in range(n_servers)
     ]
@@ -315,18 +335,20 @@ def _engine_setup(
 
 
 def _run_engine(
-    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
+    trace: Optional[TraceRecorder] = None,
 ) -> List[Request]:
     from repro.serving.session import ServeSession
 
-    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
+    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle, trace=trace)
     session = ServeSession(server)
     session.run(pairs)
     return [r for r, _ in pairs]
 
 
 def _run_async_engine(
-    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
+    trace: Optional[TraceRecorder] = None,
 ) -> List[Request]:
     """The live-concurrency cell: open-loop submission through the
     `AsyncServeSession` frontend, streams drained by concurrent clients."""
@@ -334,7 +356,7 @@ def _run_async_engine(
 
     from repro.serving.frontend import AsyncServeSession
 
-    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle)
+    (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle, trace=trace)
 
     async def _serve() -> None:
         frontend = AsyncServeSession(
@@ -377,7 +399,8 @@ def router_cell_block(s: Dict) -> Dict:
 
 
 def _run_router(
-    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
+    trace: Optional[TraceRecorder] = None,
 ) -> Tuple[List[Request], Dict]:
     """The fleet cell: ``router_replicas`` servers behind a `RouterSession`,
     placement by ``router_policy``. Returns the terminal requests plus the
@@ -398,6 +421,7 @@ def _run_router(
             backpressure=hcfg.backpressure,
             prefix_block=hcfg.prefix_block,
             prefix_cache_blocks=hcfg.prefix_cache_blocks,
+            trace=trace,
         )
         async with router:
             await router.replay(pairs, clients=hcfg.async_clients)
@@ -432,7 +456,8 @@ def disagg_cell_block(core, reqs: Sequence[Request]) -> Dict:
 
 
 def _run_disagg(
-    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
+    trace: Optional[TraceRecorder] = None,
 ) -> Tuple[List[Request], Dict]:
     """The P/D-split cell: ``disagg_prefill``:``disagg_decode`` servers on
     ONE shared ManualClock behind a `DisaggFleetSession`, prefill deflection
@@ -460,6 +485,7 @@ def _run_disagg(
             stream_buffer=hcfg.stream_buffer,
             backpressure=hcfg.backpressure,
             max_inflight_transfers=hcfg.max_inflight_transfers,
+            trace=trace,
         )
         async with fleet:
             await fleet.replay(pairs, clients=hcfg.async_clients)
@@ -468,6 +494,17 @@ def _run_disagg(
     fleet = asyncio.run(_serve())
     terminal = [r for r, _ in pairs]
     return terminal, disagg_cell_block(fleet.core, terminal)
+
+
+def _trace_path(base: str, scenario: str, prefill: str, decode: str, backend: str) -> str:
+    """Per-cell trace path: the cell's coordinates spliced in before the
+    extension, so one ``--trace out.json`` grid run never clobbers itself.
+    The suffix is deterministic — consumers can reconstruct it, but the
+    robust way is to read ``cell["trace"]["path"]`` from the report."""
+    stem, dot, ext = base.rpartition(".")
+    if not dot:
+        stem, ext = base, "json"
+    return f"{stem}.{backend}.{scenario}.{prefill}.{decode}.{ext}"
 
 
 def evaluate_cell(
@@ -504,16 +541,24 @@ def evaluate_cell(
     t0 = time.perf_counter()  # repro: allow[RPA001] intentional host wall time
     router_block = None
     disagg_block = None
+    # trace=None keeps every emission site on its `if recorder is None`
+    # fast path — the traced and untraced runs are bit-identical either way
+    # (pinned in tests), this just skips even the no-op checks
+    recorder = TraceRecorder() if hcfg.trace is not None else None
     if backend == "sim":
-        terminal = _run_sim(reqs, prefill, decode, hcfg)
+        terminal = _run_sim(reqs, prefill, decode, hcfg, trace=recorder)
     elif backend == "engine":
-        terminal = _run_engine(reqs, prefill, decode, hcfg, bundle)
+        terminal = _run_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
     elif backend == "async-engine":
-        terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle)
+        terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
     elif backend == "disagg":
-        terminal, disagg_block = _run_disagg(reqs, prefill, decode, hcfg, bundle)
+        terminal, disagg_block = _run_disagg(
+            reqs, prefill, decode, hcfg, bundle, trace=recorder
+        )
     else:
-        terminal, router_block = _run_router(reqs, prefill, decode, hcfg, bundle)
+        terminal, router_block = _run_router(
+            reqs, prefill, decode, hcfg, bundle, trace=recorder
+        )
     cell = dict(
         scenario=scenario,
         prefill=prefill,
@@ -526,6 +571,13 @@ def evaluate_cell(
         cell["router"] = router_block
     if disagg_block is not None:
         cell["disagg"] = disagg_block
+    if recorder is not None:
+        trace_block = trace_cell_block(recorder.events, slo_window=hcfg.slo_window)
+        if hcfg.trace:  # "" = in-memory block only, no file
+            path = _trace_path(hcfg.trace, scenario, prefill, decode, backend)
+            trace_block["path"] = path
+            trace_block["format"] = write_trace(recorder.events, path)
+        cell["trace"] = trace_block
     return cell
 
 

@@ -1,0 +1,328 @@
+"""repro.obs: recorder/exporter/SLO units, the event-stream vs
+SessionMetrics cross-check, and the overhead guard (a trace-enabled run is
+bit-identical to a recorder-free run — tracing observes, never perturbs)."""
+import copy
+import json
+
+import pytest
+
+from repro.core.request import Phase, Request, SLOSpec
+from repro.obs import (
+    Event,
+    EventType,
+    TERMINAL_EVENTS,
+    TraceRecorder,
+    attainment_from_events,
+    check_terminal_invariant,
+    chrome_trace,
+    counters_from_events,
+    read_jsonl,
+    trace_cell_block,
+    windowed_slo,
+    write_jsonl,
+    write_trace,
+)
+
+
+def _stream() -> TraceRecorder:
+    """One hand-built request lifecycle across a prefill and a decode pool."""
+    tr = TraceRecorder()
+    tr.emit(EventType.SUBMIT, 0.0, rid=0, tenant="a", pool="p0", arrival=0.0,
+            input_len=4, output_len=2, slo_ttft=1.0, slo_tpot=0.5,
+            slo_class="standard")
+    tr.emit(EventType.ADMIT, 0.0, rid=0, tenant="a", pool="p0", queue_depth=1)
+    tr.emit(EventType.PREFILL_START, 0.1, rid=0, pool="p0", take=4)
+    tr.emit(EventType.PREFILL_END, 0.2, rid=0, pool="p0", queue_depth=0)
+    tr.emit(EventType.HANDOFF_QUEUED, 0.2, rid=0, pool="p0")
+    tr.emit(EventType.HANDOFF_START, 0.2, rid=0, pool="p0", ready_at=0.25)
+    tr.emit(EventType.TOKEN, 0.2, rid=0, pool="p0")
+    tr.emit(EventType.HANDOFF_ATTACH, 0.25, rid=0, pool="p1", slot=0)
+    tr.emit(EventType.DECODE_STEP, 0.3, pool="p1", batch=1, step_time=0.05,
+            tpot_budget=0.5)
+    tr.emit(EventType.TOKEN, 0.3, rid=0, tenant="a", pool="p1", slot=0)
+    tr.emit(EventType.DONE, 0.3, rid=0, tenant="a", pool="p1", slot=0,
+            n_generated=2)
+    return tr
+
+
+# ------------------------------------------------------------------ events
+def test_event_dict_roundtrip():
+    ev = Event(type=EventType.TOKEN, t=1.5, rid=3, tenant="t", pool="p",
+               slot=2, data={"k": 1})
+    assert Event.from_dict(ev.as_dict()) == ev
+
+
+def test_recorder_basics():
+    tr = _stream()
+    assert len(tr) == 11
+    assert tr.by_type()["token"] == 2
+    assert [e.type for e in tr.for_rid(0)][0] is EventType.SUBMIT
+    # the scheduler-track DECODE_STEP carries rid=-1, not any request's rid
+    assert all(e.rid == 0 for e in tr.for_rid(0))
+    tr.clear()
+    assert len(tr) == 0
+
+
+def test_terminal_invariant_sees_exactly_one_terminal():
+    tr = _stream()
+    assert check_terminal_invariant(tr.events) == {0: ["done"]}
+    tr.emit(EventType.CANCEL, 0.4, rid=0, stage="decode")  # double terminal
+    assert check_terminal_invariant(tr.events)[0] == ["done", "cancel"]
+    assert EventType.CANCEL in TERMINAL_EVENTS
+
+
+def test_counters_from_synthetic_stream():
+    tr = _stream()
+    tr.emit(EventType.SUBMIT, 0.1, rid=1, tenant="b", arrival=0.1,
+            input_len=4, output_len=2, slo_ttft=1.0, slo_tpot=0.5,
+            slo_class="standard")
+    tr.emit(EventType.SHED, 0.1, rid=1, tenant="b", scope="tenant",
+            queue_depth=3)
+    c = counters_from_events(tr.events)
+    assert c["submitted"] == 2 and c["accepted"] == 1
+    assert c["completed"] == 1 and c["rejected"] == 1
+    assert c["rejected_tenant"] == 1 and c["rejected_global"] == 0
+    assert c["rejected_rids"] == [1]
+    assert c["completed_by_tenant"] == {"a": 1}
+
+
+# ---------------------------------------------------------------- exporters
+def test_jsonl_roundtrip(tmp_path):
+    tr = _stream()
+    path = str(tmp_path / "ev.jsonl")
+    write_jsonl(tr.events, path)
+    assert read_jsonl(path) == tr.events
+
+
+def test_jsonl_malformed_line_reports_location(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"type": "token", "t": 0.0}\nnot json\n')
+    with pytest.raises(ValueError, match=r"bad\.jsonl:2"):
+        read_jsonl(str(path))
+
+
+def test_chrome_trace_shape():
+    doc = chrome_trace(_stream().events)
+    assert set(doc) >= {"traceEvents", "displayTimeUnit", "otherData"}
+    evs = doc["traceEvents"]
+    # process metadata for both pools, named after the pool labels
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"p0", "p1"} <= names
+    # slices exist for prefill / handoff / decode, flows for TTFT
+    assert {"X", "s", "f"} <= {e["ph"] for e in evs}
+    flow_ids = [e["id"] for e in evs if e["ph"] in ("s", "f")]
+    assert flow_ids and all(i != 0 for i in flow_ids)
+    # per-track timestamps are monotone (the body is globally ts-sorted)
+    tracks = {}
+    for e in evs:
+        if e["ph"] == "M":
+            continue
+        tracks.setdefault((e.get("pid"), e.get("tid")), []).append(e["ts"])
+    for ts in tracks.values():
+        assert all(a <= b for a, b in zip(ts, ts[1:]))
+
+
+def test_write_trace_dispatches_on_suffix(tmp_path):
+    tr = _stream()
+    assert write_trace(tr.events, str(tmp_path / "t.jsonl")) == "jsonl"
+    assert write_trace(tr.events, str(tmp_path / "t.json")) == "chrome"
+    doc = json.loads((tmp_path / "t.json").read_text())
+    assert "traceEvents" in doc
+
+
+# ---------------------------------------------------------------------- slo
+def test_windowed_slo_rejects_bad_window():
+    with pytest.raises(ValueError):
+        windowed_slo(_stream().events, 0.0)
+
+
+def test_windowed_slo_buckets_terminal_events():
+    out = windowed_slo(_stream().events, 0.25)
+    assert out["window"] == 0.25 and out["n_windows"] == 2
+    assert sum(w["done"] for w in out["windows"]) == 1
+    assert sum(w["submitted"] for w in out["windows"]) == 1
+    assert sum(w["tokens"] for w in out["windows"]) == 2
+    # the handoff started and attached -> the gauge returns to zero
+    assert out["windows"][-1]["inflight_last"] == 0
+
+
+def test_trace_cell_block_summary():
+    block = trace_cell_block(_stream().events, slo_window=0.25)
+    assert block["events"] == 11 and block["requests"] == 1
+    assert block["multi_terminal"] == 0
+    assert block["attainment"]["n"] == 1
+    assert block["slo"]["n_windows"] == 2
+    # no slo_window -> no slo key (the block stays schema-stable otherwise)
+    assert "slo" not in trace_cell_block(_stream().events)
+
+
+# ----------------------------------------------------- sim cross-checks
+def test_sim_events_reproduce_metrics_and_do_not_perturb():
+    from repro.sim.metrics import attainment
+    from repro.sim.simulator import run_policy
+    from repro.workloads import generate_scenario
+
+    reqs = generate_scenario("multi-tenant", seed=3, n_requests=24)
+    base = run_policy(reqs, "kairos-urgency", "kairos-slack")
+    tr = TraceRecorder()
+    traced = run_policy(reqs, "kairos-urgency", "kairos-slack", trace=tr)
+    # overhead guard: the recorder observes the identical schedule
+    for a, b in zip(base.requests, traced.requests, strict=True):
+        assert a.token_times == b.token_times
+        assert a.prefill_finish == b.prefill_finish
+    # events-derived attainment IS sim.metrics.attainment, float-for-float
+    assert attainment_from_events(tr.events) == attainment(traced.requests).as_dict()
+    assert all(len(v) == 1 for v in check_terminal_invariant(tr.events).values())
+    c = counters_from_events(tr.events)
+    assert c["submitted"] == 24 and c["completed"] == 24
+
+
+# -------------------------------------------------- engine cross-checks
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _server(tiny_model, trace=None, **ecfg_kw):
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer, EngineConfig
+
+    cfg, model, params = tiny_model
+    kw = dict(max_slots=4, max_len=64, chunk_size=16)
+    kw.update(ecfg_kw)
+    return DisaggServer(model, params, EngineConfig(**kw),
+                        clock=ManualClock(auto_step=1e-4), trace=trace)
+
+
+def _requests(cfg, n=4, max_out=4, seed=0, arrival_gap=0.0, tenant=""):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    pairs = []
+    for i in range(n):
+        length = int(rng.integers(4, 14))
+        prompt = list(map(int, rng.integers(2, cfg.vocab_size, length)))
+        pairs.append((
+            Request(rid=i, arrival=i * arrival_gap, input_len=length,
+                    output_len=max_out, slo=SLOSpec(ttft=120.0, tpot=10.0),
+                    tenant=tenant),
+            prompt,
+        ))
+    return pairs
+
+
+def test_engine_trace_on_is_bit_identical_to_trace_off(tiny_model):
+    """The overhead guard on the live engine: an enabled recorder must not
+    move a single clock read — identical outputs, timings, and summary."""
+    from repro.serving.session import ServeSession
+
+    cfg = tiny_model[0]
+    sess0 = ServeSession(_server(tiny_model))
+    out0 = sess0.run(_requests(cfg, n=5))
+    tr = TraceRecorder()
+    sess1 = ServeSession(_server(tiny_model, trace=tr))
+    out1 = sess1.run(_requests(cfg, n=5))
+    assert out0 == out1
+    for a, b in zip(sess0.requests, sess1.requests, strict=True):
+        assert a.token_times == b.token_times
+        assert a.ttft() == b.ttft()
+        assert a.mean_tpot() == b.mean_tpot()
+    # the recorder adds no metric and changes no value
+    assert sess0.summary() == sess1.summary()
+    assert len(tr) > 0
+
+
+def test_engine_counters_match_session_metrics(tiny_model):
+    """Satellite cross-check: fold the event stream back into
+    SessionMetrics-equivalent counters and demand equality — sheds (global
+    quota), a queue-stage cancel, and prefix-cache hit accounting included."""
+    from repro.serving.prefixcache import PrefixCache
+    from repro.serving.session import ServeSession
+
+    cfg = tiny_model[0]
+    sess = ServeSession(_server(tiny_model, trace=TraceRecorder(),
+                                admission_queue_depth=3),
+                        prefix_cache=PrefixCache(block=4))
+    pairs = _requests(cfg, n=6)
+    # a literal shared head so the cache has something to hit
+    head = pairs[0][1][:4]
+    for _, p in pairs:
+        p[:4] = head
+    for r, p in pairs:
+        sess.submit(r, p)  # arrivals all at t=0: the 4th+ queued are shed
+    cancelled = next(r for r, _ in pairs if r.phase not in
+                     (Phase.FAILED, Phase.CANCELLED))
+    assert sess.cancel(cancelled.rid)
+    while sess.has_work:
+        sess.step()
+    tr = sess.trace
+    m = sess.metrics
+    c = counters_from_events(tr.events)
+    assert c["submitted"] == m.submitted == 6
+    assert c["accepted"] == m.accepted
+    assert c["rejected"] == m.rejected > 0
+    assert c["rejected_global"] == m.rejected_global
+    assert c["rejected_tenant"] == m.rejected_tenant
+    assert c["completed"] == m.completed
+    assert c["cancelled"] == m.cancelled == 1
+    assert sorted(c["rejected_rids"]) == sorted(m.rejected_rids)
+    assert sorted(c["cancelled_rids"]) == sorted(m.cancelled_rids)
+    assert c["prefix_lookups"] == m.prefix_lookups == m.accepted
+    assert c["prefix_hits"] == m.prefix_hits > 0
+    assert c["prefix_hit_tokens"] == m.prefix_hit_tokens
+    assert c["prefix_lookup_tokens"] == m.prefix_lookup_tokens
+    assert all(len(v) == 1 for v in check_terminal_invariant(tr.events).values())
+
+
+def test_cancel_mid_handoff_emits_exactly_one_terminal(tiny_model):
+    """The satellite bugfix contract: a cancel landing while the KV is on
+    the wire funnels through one path and emits exactly one terminal event,
+    stamped with the transfer stage."""
+    from repro.serving.clock import ManualClock
+    from repro.serving.disagg import DisaggSession
+    from repro.serving.engine import DisaggServer, EngineConfig
+
+    cfg, model, params = tiny_model
+    clock = ManualClock(auto_step=1e-4)
+    ecfg = EngineConfig(max_slots=4, max_len=64, chunk_size=16,
+                        transfer_lat=0.5)
+    mk = lambda: DisaggServer(model, params, ecfg, clock=clock)
+    tr = TraceRecorder()
+    sess = DisaggSession([mk()], [mk()], trace=tr)
+    (r, p), = _requests(cfg, n=1)
+    sess.submit(r, p)
+    sess.step()  # prefill completes; the 0.5s transfer is now in flight
+    assert r.phase == Phase.TRANSFER
+    assert sess.cancel(r.rid)
+    terminals = [e for e in tr.events if e.type in TERMINAL_EVENTS]
+    assert len(terminals) == 1
+    assert terminals[0].type is EventType.CANCEL
+    assert terminals[0].data["stage"] == "inflight"
+    assert check_terminal_invariant(tr.events)[r.rid] == ["cancel"]
+
+
+# ------------------------------------------------------------ harness block
+def test_harness_trace_block_adds_no_metric_drift():
+    from repro.workloads.harness import HarnessConfig, evaluate_cell
+
+    args = ("multi-tenant", "kairos-urgency", "kairos-slack", "sim")
+    plain = evaluate_cell(*args, hcfg=HarnessConfig(n_requests=20, seed=2))
+    traced = evaluate_cell(
+        *args, hcfg=HarnessConfig(n_requests=20, seed=2, trace="", slo_window=5.0)
+    )
+    strip = lambda c: {k: v for k, v in c.items()
+                       if k not in ("wall_time_s", "trace")}
+    assert strip(plain) == strip(traced)  # tracing only ADDS the block
+    assert "trace" not in plain
+    block = traced["trace"]
+    assert block["requests"] == 20 and block["multi_terminal"] == 0
+    assert block["slo"]["window"] == 5.0

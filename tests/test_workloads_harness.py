@@ -160,7 +160,7 @@ def test_cli_replay_scenario_round_trips_through_save_trace(tmp_path):
     save_trace(str(trace), generate_scenario("multi-tenant", seed=4, n_requests=12))
     out = tmp_path / "replay.json"
     evaluate_main([
-        "--scenario", "replay", "--trace", str(trace), "--backend", "sim",
+        "--scenario", "replay", "--replay-trace", str(trace), "--backend", "sim",
         "--prefill", "fcfs", "--decode", "continuous", "--out", str(out),
     ])
     rep = json.loads(out.read_text())
@@ -173,7 +173,7 @@ def test_cli_replay_scenario_round_trips_through_save_trace(tmp_path):
 def test_cli_requires_trace_for_replay(capsys):
     with pytest.raises(SystemExit):
         evaluate_main(["--scenario", "replay", "--backend", "sim"])
-    assert "--trace" in capsys.readouterr().err
+    assert "--replay-trace" in capsys.readouterr().err
 
 
 # ------------------------------------------------------------ session quota

@@ -5,8 +5,10 @@ Every policy and scenario ships through a string-keyed registry
 which is exactly what makes an *untested* or *undocumented* one invisible:
 nothing imports it by symbol, so dead or broken registrants stay green
 forever. This checker cross-references every registered name against the
-test suite and DESIGN.md — a policy you can ship but nobody exercises, or
-exercise but nobody documents, fails the build at its registration site.
+test suite and the docs layer (DESIGN.md plus, when present, the
+operator-facing docs/OPERATORS.md — a name appearing in either counts) — a
+policy you can ship but nobody exercises, or exercise but nobody documents,
+fails the build at its registration site.
 
 Both registration forms count: the decorator form and the direct
 factory-call form (``register_decode("x", flag=True)(Cls)``).
@@ -30,6 +32,7 @@ REGISTER_FUNCS = (
     "register_decode",
     "register_router",
     "register_deflection",
+    "register_autoscaler",
     "register_scenario",
 )
 
@@ -65,12 +68,13 @@ class RegistryCoverageChecker:
     code = "RPA004"
     description = (
         "every registered policy/scenario name must be referenced by at "
-        "least one tests/ file and documented in DESIGN.md"
+        "least one tests/ file and documented in DESIGN.md or docs/OPERATORS.md"
     )
 
-    # overridable for fixture tests
+    # overridable for fixture tests; files that don't exist are skipped, but
+    # at least one doc file must exist for the doc side of the check to pass
     tests_dir = "tests"
-    doc_file = "DESIGN.md"
+    doc_files = ("DESIGN.md", "docs/OPERATORS.md")
 
     def run(self, project: Project) -> Iterator[Finding]:
         regs = _registrations(project)
@@ -81,8 +85,12 @@ class RegistryCoverageChecker:
         if tests_root.is_dir():
             for p in sorted(tests_root.rglob("*.py")):
                 test_texts[p.name] = p.read_text(encoding="utf-8")
-        doc_path = project.root / self.doc_file
-        doc_text = doc_path.read_text(encoding="utf-8") if doc_path.exists() else ""
+        doc_texts = [
+            (project.root / rel).read_text(encoding="utf-8")
+            for rel in self.doc_files
+            if (project.root / rel).exists()
+        ]
+        doc_label = " or ".join(self.doc_files)
 
         for kind, name, rel, line in regs:
             pat = _word_pattern(name)
@@ -93,9 +101,9 @@ class RegistryCoverageChecker:
                     "a registered-but-untested policy can rot silently; add a "
                     "test that exercises it by name",
                 )
-            if not pat.search(doc_text):
+            if not any(pat.search(t) for t in doc_texts):
                 yield Finding(
                     rel, line, self.code,
-                    f"{kind}('{name}') is not documented in {self.doc_file} — "
+                    f"{kind}('{name}') is not documented in {doc_label} — "
                     "add it to the registry table",
                 )

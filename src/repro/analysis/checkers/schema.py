@@ -45,6 +45,8 @@ SPECS: Tuple[Tuple[str, str, Tuple[str, ...], str], ...] = (
     ("workloads.evaluate_cell", "src/repro/workloads/harness.py", ("evaluate_cell",), "keys"),
     ("workloads.router_cell_block", "src/repro/workloads/harness.py", ("router_cell_block",), "keys"),
     ("workloads.disagg_cell_block", "src/repro/workloads/harness.py", ("disagg_cell_block",), "keys"),
+    ("workloads.churn_cell_block", "src/repro/workloads/harness.py", ("churn_cell_block",), "keys"),
+    ("serving.FleetSession.summary", "src/repro/serving/fleetctl.py", ("FleetSession", "summary"), "keys"),
     ("obs.counters_from_events", "src/repro/obs/events.py", ("counters_from_events",), "keys"),
     ("obs.attainment_from_events", "src/repro/obs/slo.py", ("attainment_from_events",), "keys"),
     ("obs.windowed_slo", "src/repro/obs/slo.py", ("windowed_slo",), "keys"),

@@ -61,6 +61,7 @@ ASYNC_SCOPE = Scope(
     include=(
         "src/repro/serving/frontend.py",
         "src/repro/serving/router.py",
+        "src/repro/serving/fleetctl.py",
     ),
 )
 

@@ -7,14 +7,18 @@
 Every flag that names a scenario/policy/backend accepts several values and
 the harness sweeps the cartesian grid, emitting one JSON report (per-cell
 total and per-tenant/per-class attainment, goodput, shed/cancelled counts)
-to stdout or ``--out``. All four backends — ``sim``, ``engine``,
+to stdout or ``--out``. All six backends — ``sim``, ``engine``,
 ``async-engine`` (the `AsyncServeSession` frontend with concurrent stream
 consumers; see `repro.launch.loadgen` for the dedicated open-loop driver),
 ``router`` (``--replicas`` frontends behind a `RouterSession`, placement by
 ``--router``, per-replica breakdown in the cell's ``router`` block), and
 ``disagg`` (a ``--pools P:D`` prefill/decode split with KV handoff and
 ``--deflect`` prefill deflection; handoff/deflection/per-pool-attainment in
-the cell's ``disagg`` block) — share the report schema;
+the cell's ``disagg`` block), and ``churn`` (the router fleet under a
+`FleetSession` control plane: ``--kill T:IDX`` replica-failure injection
+with in-flight restore, ``--autoscaler`` elastic scaling on windowed-SLO
+telemetry within ``--min-replicas``..``--max-replicas``; control-plane
+record in the cell's ``churn`` block) — share the report schema;
 ``--list-scenarios`` / ``--list-policies`` print the registries.
 """
 from __future__ import annotations
@@ -25,11 +29,18 @@ import sys
 from typing import List, Optional
 
 from repro.policies import (
+    available_autoscaler_policies,
     available_deflection_policies,
     available_policies,
     available_router_policies,
 )
-from repro.workloads.harness import BACKENDS, HarnessConfig, parse_pools, run_grid
+from repro.workloads.harness import (
+    BACKENDS,
+    HarnessConfig,
+    parse_kills,
+    parse_pools,
+    run_grid,
+)
 from repro.workloads.scenarios import available_scenarios
 
 
@@ -116,6 +127,29 @@ def build_parser() -> argparse.ArgumentParser:
         help="disagg backend: prefill-deflection policy from the registry",
     )
     ap.add_argument(
+        "--kill", action="append", default=None, metavar="T:IDX",
+        help="churn backend: kill replica IDX at fleet virtual time T "
+        "(repeatable; in-flight requests restore onto survivors)",
+    )
+    ap.add_argument(
+        "--autoscaler", default="static", choices=available_autoscaler_policies(),
+        help="churn backend: autoscaler policy from the repro.policies registry",
+    )
+    ap.add_argument(
+        "--autoscale-interval", type=float, default=0.05,
+        help="churn backend: autoscaler evaluation period in fleet virtual "
+        "seconds (also the windowed-SLO bucket width when --slo-window is "
+        "not given)",
+    )
+    ap.add_argument(
+        "--min-replicas", type=int, default=1,
+        help="churn backend: autoscaler floor on live replicas",
+    )
+    ap.add_argument(
+        "--max-replicas", type=int, default=6,
+        help="churn backend: autoscaler ceiling on live replicas",
+    )
+    ap.add_argument(
         "--transfer-bw", type=float, default=900e9,
         help="KV handoff bandwidth in bytes/sec (engine admission + disagg "
         "cross-server transfers, priced via CostModel.transfer_time)",
@@ -162,6 +196,11 @@ def main(argv: Optional[List[str]] = None) -> dict:
         disagg_prefill=args.pools[0],
         disagg_decode=args.pools[1],
         deflect_policy=args.deflect,
+        churn_kills=parse_kills(args.kill or ()),
+        autoscaler_policy=args.autoscaler,
+        autoscale_interval=args.autoscale_interval,
+        fleet_min_replicas=args.min_replicas,
+        fleet_max_replicas=args.max_replicas,
         transfer_bw=args.transfer_bw,
         transfer_lat=args.transfer_lat,
         trace=args.trace,

@@ -25,6 +25,19 @@ The taxonomy is the request lifecycle every backend shares:
     FAIL            engine crash containment tore the request down
                     (async frontend stepper crash); terminal
 
+Fleet-control events (rid = -1 except RESTORE; `repro.serving.fleetctl`):
+
+    REPLICA_DOWN    a replica died (``data["reason"]``: "killed" |
+                    "scale-down"; killed replicas carry recovery stats)
+    REPLICA_UP      a replica joined the fleet (``data["warmed_blocks"]``:
+                    prefix-trie nodes inherited from survivors)
+    RESTORE         one in-flight request restored onto a survivor after
+                    its replica died (rid-scoped; ``data``: src/dst
+                    replica, tokens already delivered → stream splice
+                    point). NOT a terminal — the survivor's DONE is.
+    SCALE           an autoscaler decision was applied (``data``: policy,
+                    action, n_before/n_after, the windowed-SLO evidence)
+
 Every request reaches **exactly one** terminal event (`TERMINAL_EVENTS`),
 however it dies — cancel-mid-handoff included. `counters_from_events`
 rebuilds the `SessionMetrics` counters from the stream; equality against
@@ -60,6 +73,10 @@ class EventType(str, enum.Enum):
     CANCEL = "cancel"
     DONE = "done"
     FAIL = "fail"
+    REPLICA_DOWN = "replica_down"
+    REPLICA_UP = "replica_up"
+    RESTORE = "restore"
+    SCALE = "scale"
 
 
 # the events after which a request will never produce another event

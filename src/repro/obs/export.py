@@ -35,6 +35,10 @@ _INSTANT_TYPES = (
     EventType.ROUTE,
     EventType.CANCEL,
     EventType.FAIL,
+    EventType.REPLICA_DOWN,
+    EventType.REPLICA_UP,
+    EventType.RESTORE,
+    EventType.SCALE,
 )
 
 

@@ -8,17 +8,25 @@ Importing this package registers every built-in policy. Public surface:
     DecodePolicy         protocol: select(active, t_now) / observe(batch, t)
     RouterPolicy         protocol: select(replicas, request, prompt) -> idx
     DeflectionPolicy     protocol: decide(fleet, request, prompt) -> bool
+    AutoscalerPolicy     protocol: decide(slo, n, n_min, n_max) -> target n
     register_prefill     class decorator, @register_prefill("my-policy")
     register_decode      class decorator (ctor takes the StepTimeLUT first)
     register_router      class decorator, @register_router("my-router")
     register_deflection  class decorator, @register_deflection("my-rule")
+    register_autoscaler  class decorator, @register_autoscaler("my-scaler")
     make_prefill         spec|name -> PrefillPolicy
     make_decode          spec|name, lut -> DecodePolicy
     make_router          spec|name -> RouterPolicy
     make_deflection      spec|name -> DeflectionPolicy
+    make_autoscaler      spec|name -> AutoscalerPolicy
     available_policies   {"prefill": ..., "decode": ..., "router": ...,
-                          "deflection": ...}
+                          "deflection": ..., "autoscaler": ...}
 """
+from repro.policies.autoscale import (
+    QueueThresholdAutoscaler,
+    SLOAttainmentPIDAutoscaler,
+    StaticAutoscaler,
+)
 from repro.policies.decode import (
     ContinuousBatchingScheduler,
     SlackDecodeScheduler,
@@ -37,6 +45,7 @@ from repro.policies.prefill import (
     UrgencyPrefillScheduler,
 )
 from repro.policies.registry import (
+    AutoscalerPolicy,
     DecodePolicy,
     DeflectionPolicy,
     Partition,
@@ -44,15 +53,18 @@ from repro.policies.registry import (
     PrefillPolicy,
     RouterPolicy,
     Selection,
+    available_autoscaler_policies,
     available_decode_policies,
     available_deflection_policies,
     available_policies,
     available_prefill_policies,
     available_router_policies,
+    make_autoscaler,
     make_decode,
     make_deflection,
     make_prefill,
     make_router,
+    register_autoscaler,
     register_decode,
     register_deflection,
     register_prefill,
@@ -81,6 +93,10 @@ __all__ = [
     "PrefillPressureDeflect",
     "ShortPromptDeflect",
     "SlackAwareDeflect",
+    "QueueThresholdAutoscaler",
+    "SLOAttainmentPIDAutoscaler",
+    "StaticAutoscaler",
+    "AutoscalerPolicy",
     "DecodePolicy",
     "DeflectionPolicy",
     "Partition",
@@ -88,15 +104,18 @@ __all__ = [
     "PrefillPolicy",
     "RouterPolicy",
     "Selection",
+    "available_autoscaler_policies",
     "available_decode_policies",
     "available_deflection_policies",
     "available_policies",
     "available_prefill_policies",
     "available_router_policies",
+    "make_autoscaler",
     "make_decode",
     "make_deflection",
     "make_prefill",
     "make_router",
+    "register_autoscaler",
     "register_decode",
     "register_deflection",
     "register_prefill",

@@ -112,6 +112,24 @@ class DeflectionPolicy(Protocol):
                prompt: Sequence[int]) -> bool: ...
 
 
+@runtime_checkable
+class AutoscalerPolicy(Protocol):
+    """Elastic-scaling decision: how many replicas should the fleet run?
+
+    ``slo`` is `repro.obs.slo.windowed_slo` output (per-window attainment,
+    queue-depth gauges, decode-time-vs-TPOT-budget series) — deliberately
+    *not* session internals, so the controller reacts to the same telemetry
+    an operator would watch. Return the desired live-replica count; the
+    fleet controller clamps it to ``[n_min, n_max]`` and performs at most
+    one scale step per control interval.
+    """
+
+    name: str
+
+    def decide(self, slo: Mapping[str, Any], n_replicas: int,
+               n_min: int, n_max: int) -> int: ...
+
+
 @dataclass(frozen=True)
 class PolicySpec:
     """Serializable policy reference: registered name + construction kwargs.
@@ -142,6 +160,7 @@ _PREFILL: Dict[str, _Entry] = {}
 _DECODE: Dict[str, _Entry] = {}
 _ROUTER: Dict[str, _Entry] = {}
 _DEFLECTION: Dict[str, _Entry] = {}
+_AUTOSCALER: Dict[str, _Entry] = {}
 
 
 def register_prefill(name: str, **defaults):
@@ -189,6 +208,16 @@ def register_deflection(name: str, **defaults):
     return deco
 
 
+def register_autoscaler(name: str, **defaults):
+    """Class decorator: register an autoscaler policy under ``name``."""
+
+    def deco(cls):
+        _AUTOSCALER[name] = _Entry(cls, defaults)
+        return cls
+
+    return deco
+
+
 def available_prefill_policies() -> Tuple[str, ...]:
     return tuple(sorted(_PREFILL))
 
@@ -205,6 +234,10 @@ def available_deflection_policies() -> Tuple[str, ...]:
     return tuple(sorted(_DEFLECTION))
 
 
+def available_autoscaler_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_AUTOSCALER))
+
+
 def available_policies() -> Dict[str, Tuple[str, ...]]:
     """Every registered policy name, per side — the CLI help / parity-test
     enumeration entry point."""
@@ -213,6 +246,7 @@ def available_policies() -> Dict[str, Tuple[str, ...]]:
         "decode": available_decode_policies(),
         "router": available_router_policies(),
         "deflection": available_deflection_policies(),
+        "autoscaler": available_autoscaler_policies(),
     }
 
 
@@ -285,3 +319,10 @@ def make_deflection(
 ) -> DeflectionPolicy:
     """Construct a registered prefill-deflection policy from a spec/name."""
     return _build(_DEFLECTION, "deflection", spec, (), soft_defaults)
+
+
+def make_autoscaler(
+    spec: Union[str, PolicySpec], **soft_defaults: Any
+) -> AutoscalerPolicy:
+    """Construct a registered autoscaler policy from a spec (or bare name)."""
+    return _build(_AUTOSCALER, "autoscaler", spec, (), soft_defaults)

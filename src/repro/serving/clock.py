@@ -27,6 +27,8 @@ class Clock(Protocol):
 
     def sleep(self, dt: float) -> None: ...
 
+    def peek(self) -> float: ...
+
 
 @dataclass
 class MonotonicClock:
@@ -38,6 +40,11 @@ class MonotonicClock:
     def sleep(self, dt: float) -> None:
         if dt > 0:
             time.sleep(dt)
+
+    def peek(self) -> float:
+        """Same reading as ``monotonic`` — the wall clock has no observer
+        cost, so observing and peeking are one operation."""
+        return time.monotonic()
 
 
 @dataclass
@@ -52,6 +59,12 @@ class ManualClock:
     t: float = 0.0
     auto_step: float = 0.0  # seconds added per monotonic() read
 
+    def __post_init__(self) -> None:
+        # the construction origin — what reset() must restore, NOT a
+        # literal 0.0: a clock built at t=5 that "re-zeroes" to 0 would
+        # break construction parity for restarted replicas
+        self._t_init = self.t
+
     def monotonic(self) -> float:
         self.t += self.auto_step
         return self.t
@@ -63,11 +76,22 @@ class ManualClock:
     def advance(self, dt: float) -> None:
         self.t += dt
 
-    def reset(self) -> None:
-        """Re-zero virtual time. Sessions call this (via
-        `DisaggServer.reset_clock`) so runs accumulate ``auto_step`` from
-        exactly 0.0 — float accumulation depends on the starting value, so
-        without the reset two runs whose *construction* paths read the
-        clock a different number of times would disagree in the last ulp
-        even with identical serving-time read sequences."""
-        self.t = 0.0
+    def peek(self) -> float:
+        """Current virtual time WITHOUT charging ``auto_step`` — the
+        control plane's read. A fleet controller polling via ``monotonic``
+        would advance every replica's time by how often it looked,
+        destroying replay determinism; ``peek`` is observation-free."""
+        return self.t
+
+    def reset(self) -> float:
+        """Restore virtual time to its construction value and return it.
+        Sessions call this (via `DisaggServer.reset_clock`) so runs
+        accumulate ``auto_step`` from exactly the origin — float
+        accumulation depends on the starting value, so without the reset
+        two runs whose *construction* paths read the clock a different
+        number of times would disagree in the last ulp even with identical
+        serving-time read sequences. Restarted replicas
+        (`DisaggServer.reset_for_restart`) rely on the construction-value
+        contract for post-failover timing parity."""
+        self.t = self._t_init
+        return self.t

@@ -216,6 +216,24 @@ class DisaggServer:
         self.trace = trace
         self.prefill = PrefillEngine(model, params, ecfg)
         self.decode = DecodeEngine(model, params, ecfg)
+        self._init_sched_state()
+        # transfer pricing shared with the simulator: one formula for both
+        # the in-server admission handoff and the fleet's cross-server copy
+        from repro.sim.costmodel import CalibratedCostModel  # no import cycle
+
+        self.cost = CalibratedCostModel(
+            transfer_lat=ecfg.transfer_lat,
+            kv_bytes_per_token=ecfg.kv_bytes_per_token,
+            transfer_bw=ecfg.transfer_bw,
+        )
+        self._t0 = self.clock.monotonic()
+        self.last_session = None  # ServeSession of the most recent serve()
+
+    def _init_sched_state(self) -> None:
+        """(Re)build every piece of adaptive scheduling state — shared by
+        construction and `reset_for_restart` so a restarted replica is
+        indistinguishable from a freshly built one."""
+        ecfg = self.ecfg
         # schedulers come from the shared policy registry — the same specs
         # (and the same classes) the simulator constructs from
         self.prefill_sched = make_prefill(ecfg.prefill_policy)
@@ -227,32 +245,45 @@ class DisaggServer:
             ecfg.decode_policy, self.lut, slo_margin=ecfg.slo_margin
         )
         self.mu = PrefillThroughputEstimator(mu=2000.0)
-        # transfer pricing shared with the simulator: one formula for both
-        # the in-server admission handoff and the fleet's cross-server copy
-        from repro.sim.costmodel import CalibratedCostModel  # no import cycle
-
-        self.cost = CalibratedCostModel(
-            transfer_lat=ecfg.transfer_lat,
-            kv_bytes_per_token=ecfg.kv_bytes_per_token,
-            transfer_bw=ecfg.transfer_bw,
-        )
         self._key = jax.random.key(0)
-        self._t0 = self.clock.monotonic()
-        self.last_session = None  # ServeSession of the most recent serve()
 
     # ------------------------------------------------------------------ time
     def _now(self) -> float:
         return (self.clock.monotonic() - self._t0) * self.ecfg.time_scale
 
+    def peek_now(self) -> float:
+        """Observation-free virtual now: the control plane's clock read.
+        Unlike `_now` this never charges a `ManualClock.auto_step`, so a
+        fleet controller may poll at any frequency without perturbing the
+        replica's deterministic timing (see serving/clock.py)."""
+        return (self.clock.peek() - self._t0) * self.ecfg.time_scale
+
     def reset_clock(self) -> None:
         """Re-zero virtual time (arrivals are relative to this origin).
-        Virtual clocks re-zero *exactly* (t = 0.0) so timings are invariant
-        to how many construction-time reads preceded the session."""
+        Virtual clocks re-zero *exactly* to their construction origin so
+        timings are invariant to how many construction-time reads preceded
+        the session."""
         if hasattr(self.clock, "reset"):
-            self.clock.reset()
-            self._t0 = 0.0
+            origin = self.clock.reset()
+            # pre-origin-contract clocks returned None from reset(); their
+            # construction value was always 0.0
+            self._t0 = 0.0 if origin is None else origin
         else:
             self._t0 = self.clock.monotonic()
+
+    # --------------------------------------------------------------- restart
+    def reset_for_restart(self) -> None:
+        """Return the server to its just-constructed state: the live half of
+        `dist/fault.py::plan_recovery`'s final step. Drops every decode slot
+        (the KV is gone — survivors re-prefill restored requests), rebuilds
+        the adaptive scheduler state, and re-zeroes the clock so the
+        restarted replica's timing is pinnable against a fresh build."""
+        ecfg = self.ecfg
+        self.decode.cache = self.model.init_cache(ecfg.max_slots, ecfg.max_len)
+        self.decode.alloc = SlotAllocator(ecfg.max_slots, ecfg.kv_cap_tokens)
+        self._init_sched_state()
+        self.last_session = None
+        self.reset_clock()
 
     # ------------------------------------------------------------------ serve
     def serve(self, requests: List[Tuple[Request, List[int]]]) -> Dict[int, List[int]]:

@@ -314,7 +314,8 @@ class AsyncServeSession:
         self._wake.set()
         await self._drained.wait()
         stepper, self._stepper = self._stepper, None
-        await stepper  # surfaces a stepper crash as a traceback
+        if stepper is not None:  # kill() mid-drain leaves nothing to await
+            await stepper  # surfaces a stepper crash as a traceback
 
     async def aclose(self) -> None:
         """Hard stop: cancel the stepper and every in-flight request —
@@ -340,6 +341,32 @@ class AsyncServeSession:
                 h.cancel_reason = h.cancel_reason or "client"
             h._close_now()
         self._handles.clear()
+
+    async def kill(self) -> None:
+        """Fault injection: this replica dies mid-step.
+
+        Unlike `aclose` it emits NO terminal events and closes NO streams —
+        a dead process doesn't get to say goodbye. Every piece of frontend
+        and session state (scheduled intents, live handles, queue/active
+        sets, the allocator) is left exactly where the crash found it, so a
+        fleet controller can harvest the in-flight work and restore it onto
+        survivors (`repro.serving.fleetctl.FleetSession.kill_replica`),
+        which is also responsible for clearing the carcass afterwards —
+        otherwise those handles would double-terminate at teardown.
+        """
+        if self._stepper is None:
+            return
+        self._stepper.cancel()
+        try:
+            await self._stepper
+        except asyncio.CancelledError:
+            pass
+        except BaseException:
+            pass  # a crash mid-kill is still a dead replica
+        self._stepper = None
+        # a drain() racing the kill must not wait forever on a stepper that
+        # will never set the event; it finds _stepper already None above
+        self._drained.set()
 
     def _cancel_unadmitted(self, intent: "_Intent") -> None:
         """Withdraw a request admission control never saw: it still ends in

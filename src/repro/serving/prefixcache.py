@@ -158,6 +158,45 @@ class PrefixCache:
         self._evict()
         return hit, eligible
 
+    # ---------------------------------------------------------------- merge
+    def merge_from(self, other: "PrefixCache") -> int:
+        """Copy every trie node of ``other`` into this cache (fleet warm-up:
+        a freshly scaled-up replica inherits the survivors' affinity state so
+        `prefix-affinity` routing can steer shared-prefix traffic at it from
+        its first request, instead of treating it as a stranger for an entire
+        cache-refill period). Chain hashes encode their full prefix, so node
+        sets from caches with the same block size merge by plain dict union;
+        mismatched block sizes would alias unrelated prefixes and raise.
+
+        Returns the number of nodes actually added. Like the PR 5 credit
+        design this is accounting-only — no KV bytes move — and the warmed
+        trie deliberately *overstates* the newcomer's real cache so affinity
+        traffic (re)builds its session cache fastest. Stats and the LRU
+        clock are untouched; merged nodes enter at the LRU floor, first out
+        under pressure."""
+        if other.block != self.block:
+            raise ValueError(
+                f"cannot merge prefix caches with different block sizes "
+                f"({other.block} into {self.block}); chain hashes would alias"
+            )
+        added = 0
+        for h, node in other._nodes.items():
+            if h in self._nodes:
+                continue
+            self._nodes[h] = _Node(parent=node.parent)
+            added += 1
+        if added:
+            # recount children from scratch: on partial trie overlap the
+            # per-node counts from either side undercount the union, and a
+            # wrong zero would let eviction orphan a subtree
+            for node in self._nodes.values():
+                node.n_children = 0
+            for node in self._nodes.values():
+                if node.parent != _ROOT:
+                    self._nodes[node.parent].n_children += 1
+            self._evict()
+        return added
+
     # ---------------------------------------------------------------- evict
     def _evict(self) -> None:
         if self.max_blocks is None:

@@ -68,6 +68,11 @@ class ReplicaState:
     route_index: PrefixCache
     assigned: int = 0  # total ever routed here (terminal ones included)
     routed: List[Request] = field(default_factory=list)  # non-terminal view
+    # fleet liveness (repro.serving.fleetctl): a dead replica stays in
+    # `replicas` so indices/owner records remain stable, but is never
+    # routed to again; a draining one finishes its work before scale-down
+    alive: bool = True
+    draining: bool = False
 
     def _live(self) -> List[Request]:
         # prune terminal requests as they are observed, so per-submit scans
@@ -186,13 +191,17 @@ class RouterSession:
         router view, the routing index records the prompt's prefix there,
         and the replica frontend takes over (admission control included —
         a routed request can still be shed by its replica's quotas)."""
-        idx = self.policy.select(self.replicas, request, prompt)
-        if not 0 <= idx < len(self.replicas):
+        cands = self._routable()
+        if not cands:
+            raise RuntimeError("no live replica to route to (all dead/draining)")
+        k = self.policy.select(cands, request, prompt)
+        if not 0 <= k < len(cands):
             raise ValueError(
-                f"router policy {self.policy.name!r} chose replica {idx} "
-                f"of {len(self.replicas)}"
+                f"router policy {self.policy.name!r} chose replica {k} "
+                f"of {len(cands)}"
             )
-        rep = self.replicas[idx]
+        rep = cands[k]
+        idx = rep.index
         # delegate BEFORE recording the route: if the frontend rejects the
         # call outright (length mismatch, not started), no phantom load or
         # phantom prefix affinity may survive on the replica's books
@@ -213,6 +222,16 @@ class RouterSession:
                 pool=f"replica:{idx}", policy=self.policy.name,
             )
         return handle
+
+    def _routable(self) -> List[ReplicaState]:
+        """Replicas new work may land on. With every replica alive this is
+        `self.replicas` itself, so policies see the identical view (and the
+        identical indices) they always did — the bit-parity contracts hold.
+        Policies receive the candidate list and return an index *into it*;
+        `ReplicaState.index` maps back to the stable fleet index."""
+        if all(rep.alive and not rep.draining for rep in self.replicas):
+            return self.replicas
+        return [rep for rep in self.replicas if rep.alive and not rep.draining]
 
     def cancel(self, rid: int) -> bool:
         """Withdraw a routed request on whichever replica owns it (client

@@ -62,7 +62,26 @@ from repro.sim.metrics import attainment, attainment_by, goodput
 from repro.sim.simulator import SimConfig, run_policy
 from repro.workloads.scenarios import make_scenario
 
-BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine", "router", "disagg")
+BACKENDS: Tuple[str, ...] = ("sim", "engine", "async-engine", "router", "disagg", "churn")
+
+
+def parse_kills(specs: Sequence[str]) -> Tuple[Tuple[float, int], ...]:
+    """Parse repeated ``"T:IDX"`` kill specs into a ``(t, replica_index)``
+    schedule (virtual seconds on the engine timeline)."""
+    out = []
+    for spec in specs:
+        try:
+            t_str, i_str = spec.split(":")
+            t, i = float(t_str), int(i_str)
+        except ValueError:
+            raise ValueError(
+                f"kill spec must be 'T:IDX' (virtual seconds : replica index, "
+                f"e.g. 0.05:1), got {spec!r}"
+            ) from None
+        if t < 0 or i < 0:
+            raise ValueError(f"kill spec fields must be >= 0, got {spec!r}")
+        out.append((t, i))
+    return tuple(sorted(out))
 
 
 def parse_pools(spec: str) -> Tuple[int, int]:
@@ -127,6 +146,17 @@ class HarnessConfig:
     router_policy: str = "least-queued"
     prefix_block: int = 4
     prefix_cache_blocks: Optional[int] = None
+    # churn backend: the router fleet under churn — a FleetSession
+    # (repro.serving.fleetctl) with injected replica kills and an
+    # autoscaler moving the live-replica count within
+    # [fleet_min_replicas, fleet_max_replicas] every autoscale_interval
+    # virtual seconds, driven by windowed-SLO telemetry over slo_window
+    # (falls back to autoscale_interval when slo_window is None)
+    churn_kills: Tuple[Tuple[float, int], ...] = ()
+    autoscaler_policy: str = "static"
+    autoscale_interval: float = 0.05
+    fleet_min_replicas: int = 1
+    fleet_max_replicas: int = 6
     # disagg backend: prefill/decode pool sizes, the registered deflection
     # policy, KV-transfer pricing (shared by every engine backend's
     # admission handoff via EngineConfig), and the in-flight transfer bound
@@ -281,31 +311,13 @@ def _run_sim(
     return res.requests
 
 
-def _engine_setup(
-    reqs,
-    prefill: str,
-    decode: str,
-    hcfg: HarnessConfig,
-    bundle: _EngineBundle,
-    n_servers: int = 1,
-    shared_clock: bool = False,
-    trace: Optional[TraceRecorder] = None,
-):
-    """Shared (engine | async-engine | router | disagg) setup: request twins
-    plus ``n_servers`` fresh servers, each on its own deterministic
-    ManualClock — or all on ONE shared clock (``shared_clock``, the disagg
-    fleet's single-timeline requirement). Identical construction is what
-    makes the engine backends directly comparable (and the 1-replica router
-    cell bit-identical to async-engine).
-    Returns ``(servers, pairs)``; single-server callers unpack ``servers[0]``.
-    """
-    from repro.serving.clock import ManualClock
-    from repro.serving.engine import DisaggServer, EngineConfig
+def _engine_cfg(prefill: str, decode: str, hcfg: HarnessConfig):
+    """The one `EngineConfig` every engine-family backend (and the churn
+    backend's `server_factory` for scale-up replicas) builds from — keeping
+    a cold-started replica's knobs identical to the seed fleet's."""
+    from repro.serving.engine import EngineConfig
 
-    bundle.build()
-    rng = np.random.default_rng(hcfg.seed)
-    pairs = to_engine_requests(reqs, hcfg, bundle.cfg.vocab_size, rng)
-    ecfg = EngineConfig(
+    return EngineConfig(
         max_slots=hcfg.engine_max_slots,
         max_len=hcfg.engine_max_len,
         chunk_size=hcfg.engine_chunk_size,
@@ -316,6 +328,34 @@ def _engine_setup(
         transfer_lat=hcfg.transfer_lat,
         transfer_bw=hcfg.transfer_bw,
     )
+
+
+def _engine_setup(
+    reqs,
+    prefill: str,
+    decode: str,
+    hcfg: HarnessConfig,
+    bundle: _EngineBundle,
+    n_servers: int = 1,
+    shared_clock: bool = False,
+    trace: Optional[TraceRecorder] = None,
+):
+    """Shared (engine | async-engine | router | disagg | churn) setup:
+    request twins plus ``n_servers`` fresh servers, each on its own
+    deterministic ManualClock — or all on ONE shared clock
+    (``shared_clock``, the disagg fleet's single-timeline requirement).
+    Identical construction is what makes the engine backends directly
+    comparable (and the 1-replica router cell bit-identical to
+    async-engine).
+    Returns ``(servers, pairs)``; single-server callers unpack ``servers[0]``.
+    """
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer
+
+    bundle.build()
+    rng = np.random.default_rng(hcfg.seed)
+    pairs = to_engine_requests(reqs, hcfg, bundle.cfg.vocab_size, rng)
+    ecfg = _engine_cfg(prefill, decode, hcfg)
     fleet_clock = ManualClock(auto_step=1e-4) if shared_clock else None
     servers = [
         DisaggServer(
@@ -431,6 +471,65 @@ def _run_router(
     return [r for r, _ in pairs], router_cell_block(router.summary())
 
 
+def churn_cell_block(s: Dict) -> Dict:
+    """Project a `FleetSession.summary()` into the report cell: the router
+    block (the fleet IS a router) plus the ``fleet`` control-plane record —
+    kills, restores, autoscale decisions, and the per-kill recovery plans."""
+    return dict(router_cell_block(s), fleet=s["fleet"])
+
+
+def _run_churn(
+    reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
+    trace: Optional[TraceRecorder] = None,
+) -> Tuple[List[Request], Dict]:
+    """The churn cell: ``router_replicas`` servers behind a `FleetSession`
+    with the kill schedule from ``churn_kills`` injected mid-run and the
+    registered ``autoscaler_policy`` moving the live-replica count on
+    windowed-SLO telemetry. ``server_factory`` hands the controller
+    identically-configured cold replicas for scale-up."""
+    import asyncio
+
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer
+    from repro.serving.fleetctl import FleetSession
+
+    servers, pairs = _engine_setup(
+        reqs, prefill, decode, hcfg, bundle, n_servers=hcfg.router_replicas
+    )
+
+    def _factory() -> DisaggServer:
+        return DisaggServer(
+            bundle.model,
+            bundle.params,
+            _engine_cfg(prefill, decode, hcfg),
+            clock=ManualClock(auto_step=1e-4),
+        )
+
+    async def _serve() -> FleetSession:
+        fleet = FleetSession(
+            servers,
+            policy=hcfg.router_policy,
+            autoscaler=hcfg.autoscaler_policy,
+            n_min=hcfg.fleet_min_replicas,
+            n_max=hcfg.fleet_max_replicas,
+            autoscale_interval=hcfg.autoscale_interval,
+            slo_window=hcfg.slo_window or hcfg.autoscale_interval or 0.5,
+            kill_schedule=hcfg.churn_kills,
+            server_factory=_factory,
+            stream_buffer=hcfg.stream_buffer,
+            backpressure=hcfg.backpressure,
+            prefix_block=hcfg.prefix_block,
+            prefix_cache_blocks=hcfg.prefix_cache_blocks,
+            trace=trace,
+        )
+        async with fleet:
+            await fleet.replay(pairs, clients=hcfg.async_clients)
+        return fleet
+
+    fleet = asyncio.run(_serve())
+    return [r for r, _ in pairs], churn_cell_block(fleet.summary())
+
+
 def disagg_cell_block(core, reqs: Sequence[Request]) -> Dict:
     """Project a `DisaggSession` into the report cell's ``disagg`` block:
     pool topology, the KV-handoff record, the deflection record, and the
@@ -541,6 +640,7 @@ def evaluate_cell(
     t0 = time.perf_counter()  # repro: allow[RPA001] intentional host wall time
     router_block = None
     disagg_block = None
+    churn_block = None
     # trace=None keeps every emission site on its `if recorder is None`
     # fast path — the traced and untraced runs are bit-identical either way
     # (pinned in tests), this just skips even the no-op checks
@@ -553,6 +653,10 @@ def evaluate_cell(
         terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
     elif backend == "disagg":
         terminal, disagg_block = _run_disagg(
+            reqs, prefill, decode, hcfg, bundle, trace=recorder
+        )
+    elif backend == "churn":
+        terminal, churn_block = _run_churn(
             reqs, prefill, decode, hcfg, bundle, trace=recorder
         )
     else:
@@ -571,6 +675,8 @@ def evaluate_cell(
         cell["router"] = router_block
     if disagg_block is not None:
         cell["disagg"] = disagg_block
+    if churn_block is not None:
+        cell["churn"] = churn_block
     if recorder is not None:
         trace_block = trace_cell_block(recorder.events, slo_window=hcfg.slo_window)
         if hcfg.trace:  # "" = in-memory block only, no file

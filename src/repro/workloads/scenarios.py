@@ -22,6 +22,9 @@ Built-ins:
     heavy-head      long_frac cranked up to stress HOL blocking
     prefix-heavy    shared-system-prompt tenants (prefix-cache-friendly:
                     each group's prompts start with one template)
+    flash-crowd     steady Poisson base load + one dense synchronized burst
+                    (the request-imbalance spike the fleet controller's
+                    autoscaler and failover paths are measured against)
     replay          JSONL trace via `load_trace` (requires path=...)
 """
 from __future__ import annotations
@@ -183,6 +186,73 @@ class ReplayScenario:
         # make the effective rate arbitrary)
         if self.qps is not None:
             rescale_qps(reqs, self.qps)
+        return reqs
+
+
+@dataclass(frozen=True)
+class FlashCrowdScenario:
+    """A steady base load with one dense, synchronized burst riding on top.
+
+    ``crowd_frac`` of the requests arrive as a "crowd": a burst starting at
+    ``t_crowd`` with exponential inter-arrivals at ``crowd_qps`` — an order
+    of magnitude above the base rate — of short interactive requests. The
+    burst is the canonical request-imbalance spike (PAPER §1): a fixed fleet
+    queues it (standing queue depth, TTFT misses), which is exactly the
+    windowed-telemetry signature reactive autoscalers key on. Rids are
+    assigned in arrival order across both components, so replay drives are
+    stable.
+    """
+
+    name: str
+    n_requests: int = 200
+    qps_base: float = 2.0
+    crowd_frac: float = 0.5
+    t_crowd: float = 10.0
+    crowd_qps: float = 40.0
+    slo_classes: Mapping[str, SLOSpec] = field(
+        default_factory=lambda: dict(DEFAULT_SLO_CLASSES)
+    )
+
+    def __post_init__(self):
+        if self.n_requests <= 0:
+            raise ValueError(f"n_requests must be positive, got {self.n_requests}")
+        if not 0.0 < self.crowd_frac < 1.0:
+            raise ValueError(
+                f"crowd_frac must be in (0, 1), got {self.crowd_frac}"
+            )
+        if self.qps_base <= 0 or self.crowd_qps <= 0:
+            raise ValueError("qps_base and crowd_qps must be positive")
+
+    def generate(self, seed: int = 0) -> List[Request]:
+        rng = np.random.default_rng(seed)
+        n_crowd = max(1, int(round(self.n_requests * self.crowd_frac)))
+        n_base = self.n_requests - n_crowd
+        reqs: List[Request] = []
+        base_t = PoissonArrivals(qps=self.qps_base).times(n_base, rng)
+        base_in, base_out = LengthDist().sample(n_base, rng)
+        for t, i, o in zip(base_t, base_in, base_out):
+            reqs.append(
+                Request(
+                    rid=0, arrival=float(t), input_len=int(i), output_len=int(o),
+                    slo=self.slo_classes["standard"],
+                    tenant="steady", slo_class="standard",
+                )
+            )
+        crowd_t = self.t_crowd + np.cumsum(
+            rng.exponential(1.0 / self.crowd_qps, n_crowd)
+        )
+        crowd_in, crowd_out = _INTERACTIVE_LENGTHS.sample(n_crowd, rng)
+        for t, i, o in zip(crowd_t, crowd_in, crowd_out):
+            reqs.append(
+                Request(
+                    rid=0, arrival=float(t), input_len=int(i), output_len=int(o),
+                    slo=self.slo_classes["premium"],
+                    tenant="crowd", slo_class="premium",
+                )
+            )
+        reqs.sort(key=lambda r: r.arrival)
+        for rid, r in enumerate(reqs):
+            r.rid = rid
         return reqs
 
 
@@ -352,6 +422,25 @@ def prefix_heavy(
         n_requests=n_requests,
         arrivals=PoissonArrivals(qps=qps),
         tenants=tenants,
+    )
+
+
+@register_scenario("flash-crowd")
+def flash_crowd(
+    n_requests: int = 200,
+    qps_base: float = 2.0,
+    crowd_frac: float = 0.5,
+    t_crowd: float = 10.0,
+    crowd_qps: float = 40.0,
+):
+    """Steady base + one dense burst: the churn backend's native workload."""
+    return FlashCrowdScenario(
+        name="flash-crowd",
+        n_requests=n_requests,
+        qps_base=qps_base,
+        crowd_frac=crowd_frac,
+        t_crowd=t_crowd,
+        crowd_qps=crowd_qps,
     )
 
 

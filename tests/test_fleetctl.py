@@ -1,0 +1,314 @@
+"""Fleet control plane: replica failover with stream splicing, elastic
+autoscaling on windowed-SLO telemetry, and the `windowed_slo` edge cases
+the autoscaler policies depend on.
+
+The two pinned acceptance tests:
+  * kill 1 of 3 replicas mid-decode on a flash-crowd — every in-flight
+    request on the dead replica completes on a survivor with no
+    duplicated or dropped tokens, and every rid ends with exactly one
+    terminal event (`check_terminal_invariant`);
+  * `queue-threshold` strictly beats `static` on windowed e2e SLO
+    attainment when a flash crowd hits an under-provisioned fleet.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.request import Phase, Request, SLOSpec
+from repro.obs.events import Event, EventType, check_terminal_invariant
+from repro.obs.slo import attainment_from_events, windowed_slo
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("llama3-8b-smoke").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _server(tiny_model):
+    from repro.serving.clock import ManualClock
+    from repro.serving.engine import DisaggServer, EngineConfig
+
+    cfg, model, params = tiny_model
+    return DisaggServer(
+        model, params,
+        EngineConfig(max_slots=4, max_len=64, chunk_size=16),
+        clock=ManualClock(auto_step=1e-4),
+    )
+
+
+# ------------------------------------------------------------- failover
+def test_kill_mid_decode_restores_on_survivors(tiny_model):
+    """The pinned churn cell: one of three replicas dies mid-decode under
+    a flash crowd; its in-flight requests finish on survivors with the
+    token streams spliced exactly once (greedy decode regenerates the
+    identical prefix, the client sees no duplicate and no gap)."""
+    from repro.serving.fleetctl import FleetSession
+    from repro.workloads.scenarios import make_scenario
+
+    cfg, _model, _params = tiny_model
+    scen_reqs = make_scenario("flash-crowd", n_requests=12).generate(seed=3)
+    # engine-scale twins: flash-crowd supplies the arrival pattern and the
+    # steady/crowd tenant split; lengths are pinned (6-token decode) so
+    # every request spends real time in the decode phase the kill targets
+    rng = np.random.default_rng(3)
+    max_in = max(r.input_len for r in scen_reqs)
+    pairs = []
+    for r in scen_reqs:
+        n_in = 2 + round(10 * r.input_len / max_in)
+        prompt = list(map(int, rng.integers(2, cfg.vocab_size, n_in)))
+        pairs.append(
+            (
+                Request(rid=r.rid, arrival=r.arrival * 1e-4, input_len=n_in,
+                        output_len=6, slo=SLOSpec(ttft=120.0, tpot=10.0),
+                        tenant=r.tenant, slo_class=r.slo_class),
+                prompt,
+            )
+        )
+
+    async def _run():
+        fleet = FleetSession(
+            [_server(tiny_model) for _ in range(3)],
+            policy="round-robin",
+            autoscaler="static",
+            autoscale_interval=0.0,
+        )
+        async with fleet:
+            handles = [
+                await fleet.submit(req, p, at=req.arrival) for req, p in pairs
+            ]
+
+            async def killer():
+                # wait for replica 1 to be decoding (some token already
+                # generated), then kill it mid-flight
+                while True:
+                    sess = fleet.replicas[1].frontend.session
+                    if any(lr.req.n_generated >= 1 for lr in sess.active):
+                        return await fleet.kill_replica(1)
+                    await asyncio.sleep(0)
+
+            results = {}
+
+            async def consume(h):
+                results[h.rid] = await h.result()
+
+            record, *_ = await asyncio.gather(
+                killer(), *(consume(h) for h in handles)
+            )
+        return fleet, record, results
+
+    fleet, record, results = asyncio.run(_run())
+
+    assert record["restored"], "kill landed on an idle replica (vacuous test)"
+    # the recovery record tells the dist/fault.py story against live state
+    assert [s[0] for s in record["steps"][:2]] == ["drain", "checkpoint"]
+    assert record["steps"][-1][0] == "restore"
+    assert record["mesh"]["shape"]
+    assert record["snapshot"]["slots_live"] >= 1
+
+    outs = fleet.outputs
+    for req, _prompt in pairs:
+        # no drops, no duplicates: the client-visible stream equals the
+        # engine's own output record, at exactly the requested length
+        assert req.phase is Phase.DONE, (req.rid, req.phase)
+        assert results[req.rid] == outs[req.rid], req.rid
+        assert len(results[req.rid]) == req.output_len, req.rid
+
+    terminals = check_terminal_invariant(fleet.trace.events)
+    assert all(len(t) == 1 for t in terminals.values()), terminals
+
+    restores = [e for e in fleet.trace.events if e.type is EventType.RESTORE]
+    assert {e.rid for e in restores} == set(record["restored"])
+    assert all(e.data["src"] == 1 and e.data["dst"] != 1 for e in restores)
+
+    s = fleet.summary()
+    assert s["fleet"]["kills"] == 1
+    assert s["fleet"]["restored"] == len(record["restored"])
+    # books move with the request: no double-counting across the fleet
+    assert s["submitted"] == s["accepted"] == s["completed"] == len(pairs)
+
+
+def test_kill_refuses_last_live_replica(tiny_model):
+    from repro.serving.fleetctl import FleetSession
+
+    async def _run():
+        fleet = FleetSession([_server(tiny_model)], autoscale_interval=0.0)
+        async with fleet:
+            with pytest.raises(RuntimeError, match="last live replica"):
+                await fleet.kill_replica(0)
+
+    asyncio.run(_run())
+
+
+# ----------------------------------------------------------- autoscaling
+def _crowd_pairs(cfg, n=36, input_len=40, output_len=4, gap=0.001,
+                 ttft=0.015, tpot=1.0):
+    """A sustained flash crowd: multi-chunk prefills arriving faster than
+    one replica drains them, so the admission-queue gauge stands tall for
+    several control intervals."""
+    rng = np.random.default_rng(0)
+    prompts = [
+        list(map(int, rng.integers(2, cfg.vocab_size, input_len)))
+        for _ in range(n)
+    ]
+    return [
+        (
+            Request(rid=i, arrival=gap * i, input_len=input_len,
+                    output_len=output_len, slo=SLOSpec(ttft=ttft, tpot=tpot)),
+            p,
+        )
+        for i, p in enumerate(prompts)
+    ]
+
+
+def _run_autoscaled(tiny_model, autoscaler, interval=0.005):
+    from repro.serving.fleetctl import FleetSession
+
+    cfg, _model, _params = tiny_model
+    pairs = _crowd_pairs(cfg)
+
+    async def _run():
+        fleet = FleetSession(
+            [_server(tiny_model)],
+            policy="least-queued",
+            autoscaler=autoscaler,
+            n_min=1, n_max=3,
+            autoscale_interval=interval,
+            slo_window=interval,
+            server_factory=lambda: _server(tiny_model),
+        )
+        async with fleet:
+            await fleet.replay(pairs, clients=8)
+        return fleet
+
+    fleet = asyncio.run(_run())
+    slo = windowed_slo(fleet.trace.events, interval)
+    scored = [w for w in slo["windows"] if w["done"] + w["shed"]]
+    windowed_e2e = (
+        sum(w["e2e"] * (w["done"] + w["shed"]) for w in scored)
+        / sum(w["done"] + w["shed"] for w in scored)
+    )
+    return fleet, windowed_e2e
+
+
+def test_queue_threshold_beats_static_on_windowed_e2e(tiny_model):
+    """The pinned comparison: the reactive policy must strictly beat the
+    fixed fleet on windowed e2e attainment when the crowd hits."""
+    static_fleet, static_e2e = _run_autoscaled(tiny_model, "static")
+    qt_fleet, qt_e2e = _run_autoscaled(tiny_model, "queue-threshold")
+
+    assert static_fleet.summary()["fleet"]["scale_ups"] == 0
+    sqt = qt_fleet.summary()["fleet"]
+    assert sqt["scale_ups"] >= 1, "queue-threshold never scaled up"
+    assert qt_e2e > static_e2e, (qt_e2e, static_e2e)
+
+    # the SCALE event carries the evidence an operator would audit
+    scales = [e for e in qt_fleet.trace.events if e.type is EventType.SCALE]
+    assert scales and all(
+        e.data["policy"] == "queue-threshold" and "evidence" in e.data
+        for e in scales
+    )
+    # every request still completes under either policy
+    assert static_fleet.summary()["completed"] == 36
+    assert qt_fleet.summary()["completed"] == 36
+
+
+def test_scale_up_requires_factory(tiny_model):
+    from repro.serving.fleetctl import FleetSession
+
+    async def _run():
+        fleet = FleetSession([_server(tiny_model)], autoscale_interval=0.0)
+        async with fleet:
+            assert not await fleet._scale_up(0.0)  # no server_factory
+        assert fleet.summary()["fleet"]["scale_ups"] == 0
+
+    asyncio.run(_run())
+
+
+# --------------------------------------------------- windowed_slo edges
+def _ev(etype, t, rid=-1, **data):
+    return Event(type=etype, t=t, rid=rid, data=data)
+
+
+def _lifecycle(rid, t0, terminal=EventType.DONE, n_tokens=2, tok_dt=0.01,
+               slo_ttft=1.0, slo_tpot=1.0):
+    evs = [
+        _ev(EventType.SUBMIT, t0, rid, arrival=t0, input_len=4,
+            output_len=n_tokens, slo_ttft=slo_ttft, slo_tpot=slo_tpot),
+        _ev(EventType.ADMIT, t0, rid),
+        _ev(EventType.PREFILL_END, t0 + tok_dt / 2, rid),
+    ]
+    t = t0
+    for _ in range(n_tokens):
+        t += tok_dt
+        evs.append(_ev(EventType.TOKEN, t, rid))
+    evs.append(_ev(terminal, t + tok_dt, rid))
+    return evs
+
+
+def test_windowed_slo_empty_stream():
+    out = windowed_slo([], 0.5)
+    assert out == dict(window=0.5, n_windows=0, windows=[])
+
+
+def test_windowed_slo_rejects_nonpositive_window():
+    with pytest.raises(ValueError, match="positive"):
+        windowed_slo([], 0.0)
+    with pytest.raises(ValueError, match="positive"):
+        windowed_slo(_lifecycle(0, 0.0), -1.0)
+
+
+def test_windowed_slo_boundary_events():
+    # a terminal landing exactly ON a window edge belongs to the window it
+    # opens (half-open [t0, t1) buckets), and an event at exactly t_end =
+    # k*window still allocates window k
+    evs = _lifecycle(0, 0.0, n_tokens=1, tok_dt=0.25)  # terminal at t=0.5
+    out = windowed_slo(evs, 0.5)
+    assert out["n_windows"] == 2
+    assert [w["done"] for w in out["windows"]] == [0, 1]
+    assert out["windows"][1]["t0"] == 0.5
+    # t=0 events land in window 0
+    assert out["windows"][0]["submitted"] == 1
+
+
+def test_windowed_slo_per_window_counts_sum_to_attainment():
+    """Property: windowed counts are a partition of the run — per-window
+    done/shed/cancelled sums and attainment numerators reproduce
+    `attainment_from_events` exactly, for any seeded stream."""
+    rng = np.random.default_rng(7)
+    for _trial in range(5):
+        evs = []
+        n = int(rng.integers(5, 40))
+        for rid in range(n):
+            t0 = float(rng.uniform(0.0, 3.0))
+            terminal = [EventType.DONE, EventType.SHED, EventType.CANCEL][
+                int(rng.integers(0, 3)) if rid % 2 else 0
+            ]
+            evs.extend(
+                _lifecycle(
+                    rid, t0, terminal=terminal,
+                    n_tokens=int(rng.integers(1, 6)),
+                    tok_dt=float(rng.uniform(0.005, 0.2)),
+                    slo_ttft=float(rng.uniform(0.01, 0.5)),
+                    slo_tpot=float(rng.uniform(0.01, 0.3)),
+                )
+            )
+        att = attainment_from_events(evs)
+        out = windowed_slo(evs, float(rng.uniform(0.1, 1.0)))
+        wins = out["windows"]
+        assert sum(w["done"] for w in wins) + sum(
+            w["shed"] for w in wins
+        ) == att["n"]
+        assert sum(w["cancelled"] for w in wins) == att["n_cancelled"]
+        assert sum(w["submitted"] for w in wins) == n
+        for key in ("ttft", "tpot", "e2e"):
+            hits = sum(w[key] * (w["done"] + w["shed"]) for w in wins)
+            assert hits == pytest.approx(att[key] * att["n"])

@@ -5,11 +5,13 @@ from repro.core.lut import StepTimeLUT
 from repro.policies import (
     PolicySpec,
     SlackDecodeScheduler,
+    available_autoscaler_policies,
     available_decode_policies,
     available_deflection_policies,
     available_policies,
     available_prefill_policies,
     available_router_policies,
+    make_autoscaler,
     make_decode,
     make_prefill,
     register_prefill,
@@ -23,7 +25,7 @@ def _lut():
 
 def test_available_policies_enumerates_every_side():
     pol = available_policies()
-    assert set(pol) == {"prefill", "decode", "router", "deflection"}
+    assert set(pol) == {"prefill", "decode", "router", "deflection", "autoscaler"}
     assert set(pol["prefill"]) == {
         "kairos-urgency", "kairos-urgency-plus", "fcfs", "sjf", "edf",
     }
@@ -34,10 +36,29 @@ def test_available_policies_enumerates_every_side():
     assert set(pol["deflection"]) == {
         "never", "short-prompt-threshold", "prefill-pressure", "slack-aware",
     }
+    assert set(pol["autoscaler"]) == {
+        "static", "queue-threshold", "slo-attainment-pid",
+    }
     assert pol["prefill"] == available_prefill_policies()
     assert pol["decode"] == available_decode_policies()
     assert pol["router"] == available_router_policies()
     assert pol["deflection"] == available_deflection_policies()
+    assert pol["autoscaler"] == available_autoscaler_policies()
+
+
+def test_autoscaler_side_constructs_and_decides():
+    # every registered autoscaler builds by name and returns a clampable
+    # target from empty telemetry (the controller's first-tick input)
+    empty = dict(window=0.5, n_windows=0, windows=[])
+    for name in available_autoscaler_policies():
+        pol = make_autoscaler(name)
+        assert pol.name == name
+        assert pol.decide(empty, 2, 1, 4) == 2  # no evidence -> hold
+    qt = make_autoscaler(PolicySpec("queue-threshold", {"high": 2}))
+    spike = dict(window=0.5, n_windows=1, windows=[
+        dict(queue_depth_max=3, queue_depth_last=3, done=0, shed=0, e2e=0.0)
+    ])
+    assert qt.decide(spike, 1, 1, 4) == 2
 
 
 def test_unknown_name_raises_with_known_names():

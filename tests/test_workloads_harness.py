@@ -121,6 +121,46 @@ def test_unknown_backend_raises():
         evaluate_cell("paper-longtail", "fcfs", "continuous", "gpu-cluster")
 
 
+# ------------------------------------------------------------------ churn
+def test_churn_cell_kills_a_replica_and_reports_the_fleet_block(engine_bundle):
+    """The churn backend end-to-end through evaluate_cell: a scheduled kill
+    on a flash crowd, every request still completing, the control-plane
+    record in the cell's ``churn`` block."""
+    from repro.workloads.harness import parse_kills
+
+    cell = evaluate_cell(
+        "flash-crowd", "fcfs", "kairos-slack", "churn",
+        HarnessConfig(
+            n_requests=12, seed=1, router_replicas=3,
+            churn_kills=parse_kills(["0.002:1"]),
+            autoscaler_policy="static",
+        ),
+        _bundle=engine_bundle,
+    )
+    assert cell["backend"] == "churn"
+    assert cell["n_completed"] == 12
+    fleet = cell["churn"]["fleet"]
+    assert fleet["kills"] == 1
+    assert fleet["replicas_live"] == 2
+    assert fleet["autoscaler"] == "static"
+    [rec] = fleet["recoveries"]
+    # the recovery record replays the dist/fault.py narrative
+    assert [s[0] for s in rec["steps"][:2]] == ["drain", "checkpoint"]
+    # the churn block embeds the router block (the fleet IS a router)
+    assert cell["churn"]["replicas"] == 3
+    assert len(cell["churn"]["per_replica"]) == 3
+
+
+def test_parse_kills_parses_and_validates():
+    from repro.workloads.harness import parse_kills
+
+    assert parse_kills(["0.5:1", "0.1:0"]) == ((0.1, 0), (0.5, 1))
+    with pytest.raises(ValueError, match="T:IDX"):
+        parse_kills(["nope"])
+    with pytest.raises(ValueError, match=">= 0"):
+        parse_kills(["1.0:-2"])
+
+
 # ------------------------------------------------------------------- CLI
 def test_cli_acceptance_command_emits_full_report(tmp_path):
     """The ISSUE acceptance command (shrunk to 10 requests), engine backend."""

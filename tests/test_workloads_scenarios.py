@@ -106,6 +106,32 @@ def test_multi_tenant_has_distinct_tenants_and_slo_classes():
     assert mean_len["interactive"] < mean_len["standard"] < mean_len["batch"]
 
 
+def test_flash_crowd_spikes_at_t_crowd():
+    reqs = generate_scenario(
+        "flash-crowd", seed=2, n_requests=200, t_crowd=10.0, crowd_qps=40.0,
+        qps_base=2.0, crowd_frac=0.5,
+    )
+    assert {r.tenant for r in reqs} == {"steady", "crowd"}
+    crowd = [r for r in reqs if r.tenant == "crowd"]
+    assert len(crowd) == 100
+    assert all(r.slo_class == "premium" for r in crowd)
+    assert min(r.arrival for r in crowd) >= 10.0
+    # the spike is a spike: crowd arrivals pack into a far shorter span
+    # than the same count of steady traffic
+    crowd_span = max(r.arrival for r in crowd) - min(r.arrival for r in crowd)
+    assert crowd_span < 0.25 * (100 / 2.0)
+    # rids follow global arrival order (the harness contract)
+    arrivals = [r.arrival for r in sorted(reqs, key=lambda r: r.rid)]
+    assert arrivals == sorted(arrivals)
+
+
+def test_flash_crowd_validation():
+    with pytest.raises(ValueError):
+        generate_scenario("flash-crowd", seed=0, n_requests=10, crowd_frac=1.5)
+    with pytest.raises(ValueError):
+        generate_scenario("flash-crowd", seed=0, n_requests=10, crowd_qps=0.0)
+
+
 def test_heavy_head_is_heavier_than_paper_longtail():
     heavy = generate_scenario("heavy-head", seed=2, n_requests=400)
     paper = generate_scenario("paper-longtail", seed=2, n_requests=400)

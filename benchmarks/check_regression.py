@@ -7,7 +7,9 @@
 Compares decode throughput (p50 and mean) cell-by-cell between a committed
 baseline record and a freshly measured candidate (both produced by
 ``benchmarks/run.py``). Cells are matched on their full identity
-(scenario, prefill, decode, backend); the gate FAILS (exit 1) when any
+(scenario, prefill, decode, backend, variant — "paged" cells ran on the
+paged KV substrate and never match slot cells); the gate FAILS (exit 1)
+when any
 matched cell's throughput drops by more than ``--max-regress`` (fraction,
 default 0.25) relative to the baseline.
 
@@ -37,12 +39,17 @@ GATED_METRICS = ("decode_tput_p50", "decode_tput_mean")
 # record refresh is warranted; wall times never do
 MATERIAL_METRICS = (*GATED_METRICS, "goodput", "e2e")
 
-Key = Tuple[str, str, str, str]
+Key = Tuple[str, str, str, str, str]
 
 
 def _cells(record: Dict) -> Dict[Key, Dict]:
+    # variant distinguishes KV substrates ("" = slot, "paged" = paged pool);
+    # a paged cell regressing against its slot twin is not a regression
     return {
-        (c["scenario"], c["prefill"], c["decode"], c.get("backend", "sim")): c
+        (
+            c["scenario"], c["prefill"], c["decode"],
+            c.get("backend", "sim"), c.get("variant", ""),
+        ): c
         for c in record["cells"]
     }
 
@@ -51,6 +58,10 @@ def compare(baseline: Dict, candidate: Dict, max_regress: float) -> Tuple[bool, 
     """Returns (ok, human-readable report)."""
     base, cand = _cells(baseline), _cells(candidate)
     matched = sorted(set(base) & set(cand))
+
+    def label(key: Key) -> str:
+        return "/".join(part for part in key if part)
+
     lines = []
     failures = 0
     for key in matched:
@@ -64,12 +75,12 @@ def compare(baseline: Dict, candidate: Dict, max_regress: float) -> Tuple[bool, 
                 failures += 1
                 mark = f"REGRESSION (>{max_regress:.0%} drop)"
             lines.append(
-                f"{'/'.join(key)} {metric}: {b:.2f} -> {c:.2f} ({rel:+.1%}) {mark}"
+                f"{label(key)} {metric}: {b:.2f} -> {c:.2f} ({rel:+.1%}) {mark}"
             )
     for key in sorted(set(base) - set(cand)):
-        lines.append(f"{'/'.join(key)}: only in baseline (not gated)")
+        lines.append(f"{label(key)}: only in baseline (not gated)")
     for key in sorted(set(cand) - set(base)):
-        lines.append(f"{'/'.join(key)}: new cell (not gated)")
+        lines.append(f"{label(key)}: new cell (not gated)")
     if not matched:
         return False, "no cells in common between baseline and candidate\n" + "\n".join(lines)
     verdict = f"{failures} regression(s) across {len(matched)} matched cells"

@@ -152,6 +152,29 @@ def _disagg_grid() -> Dict:
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _paged_grid() -> Dict:
+    """Paged-KV slice: the prefix-heavy scenario on the live engine, run
+    twice — once on the slot substrate, once on refcounted pages
+    (``page_size=4``). The two cells carry distinct ``variant`` keys so the
+    gate tracks each substrate against its own committed record; the paged
+    row additionally pins the radix-reuse payoff (cached tokens > 0, pages
+    shared across requests) as regression-guarded record fields."""
+    from repro.workloads.harness import HarnessConfig, run_grid
+
+    common = dict(
+        scenarios=["prefix-heavy"],
+        prefills=["kairos-urgency"],
+        decodes=["kairos-slack"],
+        backends=["engine"],
+    )
+    slot = run_grid(hcfg=HarnessConfig(n_requests=24, seed=SEED), **common)
+    paged = run_grid(
+        hcfg=HarnessConfig(n_requests=24, seed=SEED, page_size=4), **common
+    )
+    return dict(slot=slot, paged=paged)
+
+
 def _record_cell(c: Dict) -> Dict:
     row = dict(
         scenario=c["scenario"],
@@ -175,6 +198,13 @@ def _record_cell(c: Dict) -> Dict:
         row["deflected"] = d["deflection"]["deflected"]
         row["transfers_completed"] = d["handoff"]["transfers_completed"]
         row["local_transfers"] = d["handoff"]["local_transfers"]
+    if c.get("variant"):
+        row["variant"] = c["variant"]
+    if c.get("kv"):
+        kv = c["kv"]
+        row["prefix_cached_tokens"] = kv["prefix_cached_tokens"]
+        row["prefill_computed_tokens"] = kv["prefill_computed_tokens"]
+        row["kv_shared_links"] = kv["pages"]["shared_links"]
     return row
 
 
@@ -186,12 +216,17 @@ def workloads_bench_record() -> Dict:
     grid = _workload_grid()
     router = _router_grid()
     disagg = _disagg_grid()
-    cells = list(grid["cells"]) + list(router["cells"]) + list(disagg["cells"])
+    paged = _paged_grid()
+    cells = (
+        list(grid["cells"]) + list(router["cells"]) + list(disagg["cells"])
+        + list(paged["slot"]["cells"]) + list(paged["paged"]["cells"])
+    )
     g = dict(grid["grid"])
     g["backends"] = (
         list(g["backends"])
         + list(router["grid"]["backends"])
         + list(disagg["grid"]["backends"])
+        + list(paged["slot"]["grid"]["backends"])
     )
     g["router"] = dict(
         scenarios=router["grid"]["scenarios"],
@@ -206,6 +241,11 @@ def workloads_bench_record() -> Dict:
         ),
         deflect=disagg["config"]["deflect_policy"],
         n_requests=disagg["config"]["n_requests"],
+    )
+    g["paged"] = dict(
+        scenarios=paged["paged"]["grid"]["scenarios"],
+        page_size=paged["paged"]["config"]["page_size"],
+        n_requests=paged["paged"]["config"]["n_requests"],
     )
     return dict(
         grid=g,

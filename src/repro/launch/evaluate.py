@@ -150,6 +150,17 @@ def build_parser() -> argparse.ArgumentParser:
         help="churn backend: autoscaler ceiling on live replicas",
     )
     ap.add_argument(
+        "--page-size", type=int, default=0,
+        help="engine-family backends: tokens per KV page; >0 switches the "
+        "decode engines from contiguous slot KV to refcounted pages with "
+        "radix prefix reuse (DESIGN.md §kvcache); 0 keeps the slot substrate",
+    )
+    ap.add_argument(
+        "--cache-pages", type=int, default=0,
+        help="with --page-size: total pages in the KV pool (0 = the "
+        "slot-equivalent max_slots * max_len / page_size)",
+    )
+    ap.add_argument(
         "--transfer-bw", type=float, default=900e9,
         help="KV handoff bandwidth in bytes/sec (engine admission + disagg "
         "cross-server transfers, priced via CostModel.transfer_time)",
@@ -203,6 +214,8 @@ def main(argv: Optional[List[str]] = None) -> dict:
         fleet_max_replicas=args.max_replicas,
         transfer_bw=args.transfer_bw,
         transfer_lat=args.transfer_lat,
+        page_size=args.page_size or None,
+        cache_pages=args.cache_pages or None,
         trace=args.trace,
         slo_window=args.slo_window,
     )

@@ -56,6 +56,7 @@ from repro.workloads.harness import (
     _engine_setup,
     _trace_path,
     disagg_cell_block,
+    kv_cell_block,
     parse_pools,
     router_cell_block,
 )
@@ -178,6 +179,11 @@ def run_loadgen(
         backpressure=hcfg.backpressure,
         stream_buffer=hcfg.stream_buffer,
     )
+    if hcfg.page_size is not None:
+        cell["variant"] = "paged"
+    kv_block = kv_cell_block(session.summary())
+    if kv_block is not None:
+        cell["kv"] = kv_block
     if routed:
         cell["router"] = router_cell_block(session.summary())
     if disagg:
@@ -229,6 +235,16 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument(
         "--deflect", default="never", choices=available_deflection_policies(),
         help="disagg fleet: prefill-deflection policy from the registry",
+    )
+    ap.add_argument(
+        "--page-size", type=int, default=0,
+        help="tokens per KV page; >0 switches the decode engines to paged "
+        "KV with radix prefix reuse (DESIGN.md §kvcache); 0 = slot KV",
+    )
+    ap.add_argument(
+        "--cache-pages", type=int, default=0,
+        help="with --page-size: total pages in the KV pool (0 = the "
+        "slot-equivalent max_slots * max_len / page_size)",
     )
     ap.add_argument(
         "--transfer-bw", type=float, default=900e9,
@@ -308,6 +324,8 @@ def main(argv: Optional[List[str]] = None) -> dict:
         deflect_policy=args.deflect,
         transfer_bw=args.transfer_bw,
         transfer_lat=args.transfer_lat,
+        page_size=args.page_size or None,
+        cache_pages=args.cache_pages or None,
         trace=args.trace,
         slo_window=args.slo_window,
     )

@@ -162,3 +162,71 @@ class EDFPrefillScheduler:
     ) -> Selection:
         ordered = sorted(queue, key=lambda r: (r.arrival + r.slo.ttft, r.rid))
         return _pack_budget(ordered, budget)
+
+
+@register_prefill("srpt")
+@dataclass
+class SRPTPrefillScheduler:
+    """Shortest-remaining-processing-time: the theory-grounded reference.
+
+    "Optimal Scheduling Algorithms for LLM Inference" (PAPERS.md) proves
+    SRPT-style index rules are optimal (fluid limit) for mean latency in
+    single-server LLM serving. Unlike ``sjf`` — which ranks by remaining
+    *prefill* only — SRPT's index is the request's whole remaining service:
+    prefill tokens still to compute plus decode tokens still to emit, so a
+    short prompt with a long generation queues behind a long prompt that is
+    nearly done. Reported next to kairos, it turns "beats fcfs" into "how
+    far from the clairvoyant-optimal ordering".
+    """
+
+    name: str = "srpt"
+
+    def select(
+        self, queue: Sequence[Request], t_now: float, mu: float, budget: int
+    ) -> Selection:
+        ordered = sorted(
+            queue,
+            key=lambda r: (
+                r.remaining_prefill_tokens + max(0, r.output_len - r.n_generated),
+                r.rid,
+            ),
+        )
+        return _pack_budget(ordered, budget)
+
+
+@register_prefill("cache-aware")
+@dataclass
+class CacheAwarePrefillScheduler:
+    """Prefix-reuse-aware urgency: weigh cached pages against TTFT slack.
+
+    On a paged engine (DESIGN.md §kvcache) a request whose prompt head is
+    already in the radix cache costs only its *uncached* tail of prefill
+    compute, so between two requests with equal slack the one with more
+    cached tokens finishes its prefill sooner per budget token. The score is
+    kairos-urgency's slack ratio normalized by the request's **remaining**
+    (uncached) prefill work rather than its full prompt length:
+
+        score = ((SLO_TTFT - (finish_fcfs - arrive)) / SLO_TTFT)
+                / max(1, remaining_prefill_tokens)
+
+    With no prefix cache (``prefix_cached_tokens == 0`` everywhere and no
+    chunks run) the ordering matches kairos-urgency exactly; with reuse it
+    drains high-hit requests first — which also re-touches their shared
+    pages, keeping hot prefixes at the LRU head (sglang's cache-aware
+    scheduling argument, SNIPPETS.md §3).
+    """
+
+    name: str = "cache-aware"
+
+    def select(
+        self, queue: Sequence[Request], t_now: float, mu: float, budget: int
+    ) -> Selection:
+        if not queue:
+            return []
+        finish = predict_all_finish_times(queue, t_now, mu)
+        scores = np.empty(len(queue))
+        for i, r in enumerate(queue):
+            slack = r.slo.ttft - (finish[i] - r.arrival)
+            scores[i] = (slack / r.slo.ttft) / max(1, r.remaining_prefill_tokens)
+        order = np.lexsort((np.array([r.rid for r in queue]), -scores))
+        return _pack_budget([queue[i] for i in order], budget)

@@ -218,6 +218,12 @@ class DisaggSession:
         # pool labels per-pool attainment groups by)
         self._prefill_worker_of: Dict[int, str] = {}
         self._decode_worker_of: Dict[int, str] = {}
+        # paged fleets: rid -> the decode worker whose radix cache matched
+        # the prompt at submit. The request's shared pages live in THAT
+        # worker's pool, so its handoff must land there (enforced in
+        # `_start_transfer`) and its pins release there (`_finish_cancel`
+        # or decode completion).
+        self._kv_dst: Dict[int, PoolWorker] = {}
         self.on_token = on_token
         self._callbacks: Dict[int, TokenCallback] = {}
         # observability (repro.obs): one recorder shared by every worker,
@@ -228,6 +234,10 @@ class DisaggSession:
         self.trace_label = trace_label
 
     # --------------------------------------------------------- fleet view
+    @property
+    def paged(self) -> bool:
+        return self.decode_pool[0].server.decode.paged
+
     def decode_has_capacity(self) -> bool:
         """Some decode worker can absorb a deflected prefill: free decode
         slots exceed its already-deflected backlog (the natural watermark —
@@ -309,12 +319,29 @@ class DisaggSession:
                 output_len=request.output_len, slo_ttft=request.slo.ttft,
                 slo_tpot=request.slo.tpot, slo_class=request.slo_class,
             )
+        # paged fleets probe every decode worker's radix cache for the
+        # longest live-page prefix BEFORE placement: a hit fixes the
+        # request's decode destination (the pages are physically in that
+        # worker's pool) and lets its prefill skip the cached head. Pure
+        # peeks — no insertion, no clock reads — so shed requests leave no
+        # trace. First-worker wins ties, keeping placement deterministic.
+        kv_dst: Optional[PoolWorker] = None
+        kv_hit = 0
+        kv_pages = ()
+        if self.paged:
+            for w in self.decode_pool:
+                hit, pages = w.server.decode.prefix.match_pages(prompt)
+                if hit > kv_hit:
+                    kv_dst, kv_hit, kv_pages = w, hit, pages
         deflected = self.deflect.decide(self, request, prompt)
-        target = (
-            self._pick_deflection_worker()
-            if deflected
-            else self._pick_prefill_worker(request)
-        )
+        if deflected and kv_dst is not None:
+            # deflect onto the worker that already holds the prefix pages:
+            # prefill AND decode both stay local to the KV
+            target = kv_dst
+        elif deflected:
+            target = self._pick_deflection_worker()
+        else:
+            target = self._pick_prefill_worker(request)
         shed_global = (
             self.max_queue_depth is not None
             and target.queue_len >= self.max_queue_depth
@@ -350,7 +377,25 @@ class DisaggSession:
                 tenant=request.tenant, pool=target.label,
                 policy=self.deflect.name,
             )
-        target.queue.append(LiveRequest(req=request, tokens=list(prompt)))
+        lr = LiveRequest(req=request, tokens=list(prompt))
+        if self.paged:
+            m.prefix_lookups += 1
+            block = self.decode_pool[0].server.decode.page_size
+            m.prefix_lookup_tokens += (len(prompt) // block) * block
+            if kv_dst is not None:
+                # pin the matched path on the owning worker until the
+                # request leaves the fleet, and carry the shared pages so
+                # prefill seeds from (and reserve links into) its pool
+                kv_dst.server.decode.prefix.pin_match(prompt, request.rid)
+                request.prefix_hit_tokens = kv_hit
+                request.prefix_cached_tokens = kv_hit
+                lr.shared_pages = kv_pages
+                lr.kv_src = kv_dst.server.decode
+                self._kv_dst[request.rid] = kv_dst
+                m.prefix_hits += 1
+                m.prefix_hit_tokens += kv_hit
+                m.prefix_cached_tokens += kv_hit
+        target.queue.append(lr)
         target.assigned += 1
         self._prefill_worker_of[request.rid] = target.label
         if tr is not None:
@@ -408,6 +453,11 @@ class DisaggSession:
     def _finish_cancel(
         self, lr: LiveRequest, stage: str, pool: str, slot: Optional[int] = None
     ) -> None:
+        # queue/handoff-stage cancels never reach decode.release on the
+        # pinning worker, so the radix unpin happens here (idempotent)
+        kv_dst = self._kv_dst.pop(lr.req.rid, None)
+        if kv_dst is not None:
+            kv_dst.server.decode.prefix.release(lr.req.rid)
         lr.req.phase = Phase.CANCELLED
         lr.req.done_time = self.server._now()
         self._callbacks.pop(lr.req.rid, None)
@@ -448,7 +498,13 @@ class DisaggSession:
         its KV never crosses servers)."""
         if len(self.inflight) >= self.max_inflight_transfers:
             return False
-        if tr.src.pool == "decode":
+        kv_dst = self._kv_dst.get(tr.lr.req.rid)
+        if kv_dst is not None:
+            # shared prefix pages are physically in this worker's pool;
+            # landing anywhere else would orphan them (a foreign pool can't
+            # link them). Park and retry rather than fall through.
+            candidates = [kv_dst]
+        elif tr.src.pool == "decode":
             candidates = [tr.src]
         else:
             candidates = sorted(
@@ -461,7 +517,11 @@ class DisaggSession:
             return False
         tr.dst = dst
         tr.started_at = at
-        tr.ready_at = at + tr.src.server.cost.transfer_time(tr.lr.req.input_len)
+        # cached-prefix pages never cross the wire — only computed tokens
+        # are priced (prefix_cached_tokens is 0 on non-paged fleets)
+        tr.ready_at = at + tr.src.server.cost.transfer_time(
+            tr.lr.req.input_len - tr.lr.req.prefix_cached_tokens
+        )
         tr.lr.transfer_ready_at = tr.ready_at
         self.inflight.append(tr)
         self._decode_worker_of[tr.lr.req.rid] = dst.label
@@ -477,7 +537,9 @@ class DisaggSession:
             h.local_transfers += 1
         else:
             h.cross_transfers += 1
-        h.bytes_transferred += tr.lr.req.input_len * self.ecfg.kv_bytes_per_token
+        h.bytes_transferred += (
+            tr.lr.req.input_len - tr.lr.req.prefix_cached_tokens
+        ) * self.ecfg.kv_bytes_per_token
         wait = max(0.0, at - tr.queued_at)
         h.queue_wait_total += wait
         h.queue_wait_max = max(h.queue_wait_max, wait)
@@ -556,6 +618,7 @@ class DisaggSession:
                         )
                     self._emit(req, tok, fin)
             elapsed = (clock.monotonic() - t0) * ecfg.time_scale
+            self.metrics.prefill_computed_tokens += total
             if total:
                 srv.mu.update(total, max(elapsed, 1e-9))
 
@@ -629,7 +692,8 @@ class DisaggSession:
                     r.phase = Phase.DONE
                     r.done_time = tend
                     slot = lr.slot
-                    srv.decode.release(lr)
+                    srv.decode.release(lr)  # also unpins r.rid's radix hold
+                    self._kv_dst.pop(r.rid, None)
                     w.active.remove(lr)
                     self.metrics.completed += 1
                     self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
@@ -717,12 +781,41 @@ class DisaggSession:
             rejected_by_tenant=dict(m.rejected_by_tenant),
             completed_by_tenant=dict(m.completed_by_tenant),
             cancelled_by_tenant=dict(m.cancelled_by_tenant),
+            prefix=dict(
+                lookups=m.prefix_lookups,
+                hits=m.prefix_hits,
+                hit_tokens=m.prefix_hit_tokens,
+                lookup_tokens=m.prefix_lookup_tokens,
+                hit_rate=(
+                    m.prefix_hit_tokens / m.prefix_lookup_tokens
+                    if m.prefix_lookup_tokens
+                    else 0.0
+                ),
+            ),
+            prefix_cached_tokens=m.prefix_cached_tokens,
+            prefill_computed_tokens=m.prefill_computed_tokens,
+            pages=self._pages_summary(),
             pools=dict(
                 prefill=len(self.prefill_pool), decode=len(self.decode_pool)
             ),
             handoff=self.handoff_summary(),
             deflection=self.deflection_summary(),
             requests=per,
+        )
+
+    def _pages_summary(self) -> Optional[Dict[str, Any]]:
+        """Decode-pool-wide page accounting (None on non-paged fleets)."""
+        if not self.paged:
+            return None
+        allocs = [w.server.decode for w in self.decode_pool]
+        return dict(
+            page_size=allocs[0].pages.page_size,
+            total=sum(d.pages.n_pages for d in allocs),
+            free=sum(d.pages.free_pages for d in allocs),
+            used_tokens=sum(d.pages.used_tokens for d in allocs),
+            shared_links=sum(d.pages.shared_links for d in allocs),
+            pressure_evictions=sum(d.pages.pressure_evictions for d in allocs),
+            cached_blocks=sum(len(d.prefix) for d in allocs),
         )
 
 

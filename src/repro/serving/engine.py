@@ -27,11 +27,19 @@ from repro.core.request import Request
 
 if TYPE_CHECKING:  # import for annotation only: engine stays obs-free
     from repro.obs.events import TraceRecorder
-from repro.models.model import Model
+from repro.models.model import Model, cache_struct
 from repro.models.transformer import chunk_prefill_step, decode_step
 from repro.policies import PolicySpec, make_decode, make_prefill
 from repro.serving.clock import Clock, MonotonicClock
-from repro.serving.kvcache import SlotAllocator, gather_slots, scatter_slots
+from repro.serving.kvcache import (
+    PageAllocator,
+    SlotAllocator,
+    gather_pages,
+    gather_slots,
+    scatter_pages,
+    scatter_slots,
+)
+from repro.serving.prefixcache import PrefixCache
 from repro.serving.sampler import sample
 
 
@@ -72,6 +80,16 @@ class EngineConfig:
     transfer_lat: float = 0.002
     transfer_bw: float = 900e9
     kv_bytes_per_token: float = 500e3
+    # paged KV (DESIGN.md §kvcache): a page size switches the decode cache
+    # from one contiguous max_len slot per request to a pool of fixed-size
+    # pages with per-request page tables and an engine-owned page-mapped
+    # prefix cache (real reuse: matched prefix pages are linked, not
+    # recomputed). None keeps the legacy slot layout. max_len must divide
+    # evenly into pages; requires a plain k/v attention cache.
+    page_size: Optional[int] = None
+    # pool capacity in pages; None sizes it to max_slots full-length
+    # requests (capacity-neutral vs slot mode)
+    cache_pages: Optional[int] = None
 
 
 @dataclass
@@ -84,6 +102,12 @@ class LiveRequest:
     # earliest virtual time the prefill->decode KV handoff may complete
     # (prefill_finish + CostModel.transfer_time); None until prefill is done
     transfer_ready_at: Optional[float] = None
+    # paged KV: prefix pages shared from the radix cache (set at submit),
+    # the engine whose pool holds them (prefill seeds its cache from it),
+    # and the page table built at reserve time
+    shared_pages: Optional[Tuple[int, ...]] = None
+    kv_src: Optional["DecodeEngine"] = None
+    page_table: Optional[List[int]] = None
 
 
 class PrefillEngine:
@@ -97,12 +121,35 @@ class PrefillEngine:
     def new_cache(self) -> Dict:
         return self.model.init_cache(1, self.ecfg.max_len)
 
+    def _seed_cache(self, lr: LiveRequest) -> Dict:
+        """Build lr's prefill cache pre-loaded with its shared prefix pages.
+
+        This is where prefix reuse becomes real compute savings: the chunk
+        loop starts at ``prefix_cached_tokens``, so the attention over the
+        skipped head reads KV that was never recomputed — it is copied out
+        of the source engine's page pool (positions ``[0, hit)``), exactly
+        the bytes an earlier request already produced.
+        """
+        cache = self.new_cache()
+        src = lr.kv_src
+        pages = lr.shared_pages
+        if src is None or not pages:
+            return cache
+        ps = src.page_size
+        idx = jnp.asarray(pages, jnp.int32)
+        for name, leaf in cache.items():
+            pool = src.pool[name]  # (L, n_pages, ps, ...)
+            head = jnp.take(pool, idx, axis=1)  # (L, n_shared, ps, ...)
+            head = head.reshape(pool.shape[0], 1, len(pages) * ps, *pool.shape[3:])
+            cache[name] = leaf.at[:, :, : len(pages) * ps].set(head)
+        return cache
+
     def run_chunk(self, lr: LiveRequest, take: int) -> Optional[np.ndarray]:
         """Prefill `take` tokens of lr; returns last logits if prompt done."""
         r = lr.req
         ecfg = self.ecfg
         if lr.prefill_cache is None:
-            lr.prefill_cache = self.new_cache()
+            lr.prefill_cache = self._seed_cache(lr)
         start = r.prefix_cached_tokens + r.prefilled_tokens
         chunk = lr.tokens[start : start + take]
         pad = ecfg.chunk_size - len(chunk)
@@ -124,49 +171,152 @@ class DecodeEngine:
     def __init__(self, model: Model, params: Dict, ecfg: EngineConfig):
         self.model, self.params, self.ecfg = model, params, ecfg
         cfg = model.cfg
-        self.cache = model.init_cache(ecfg.max_slots, ecfg.max_len)
+        # slot ids stay the batch-lane identity in both layouts; in paged
+        # mode they charge 0 tokens (the page pool is the capacity) so
+        # fleet probes of alloc.free keep meaning "free decode lanes"
         self.alloc = SlotAllocator(ecfg.max_slots, ecfg.kv_cap_tokens)
+        self.page_size = ecfg.page_size
+        if self.page_size is not None:
+            self._init_paged(cfg)
+        else:
+            self.pages = None
+            self.prefix = None
+            self.pool = None
+            # +1: lane max_slots is non-allocatable scratch for pad lanes —
+            # padding into a LIVE slot would overwrite its position-0 KV
+            # (the paged scratch page is the same idea at page granularity)
+            self.cache = model.init_cache(ecfg.max_slots + 1, ecfg.max_len)
+            self.scratch_slot = ecfg.max_slots
 
-        def step(params, tokens, positions, cache, slot_idx):
-            sub = gather_slots(cfg, cache, slot_idx)
+            def step(params, tokens, positions, cache, slot_idx):
+                sub = gather_slots(cfg, cache, slot_idx)
+                logits, sub2 = decode_step(params, tokens, positions, cfg, sub)
+                return logits, scatter_slots(cfg, cache, sub2, slot_idx)
+
+            self._step = jax.jit(step)
+
+    def _init_paged(self, cfg) -> None:
+        ecfg = self.ecfg
+        ps = self.page_size
+        if ps < 1:
+            raise ValueError(f"page_size must be >= 1, got {ps}")
+        if ecfg.max_len % ps:
+            raise ValueError(
+                f"max_len={ecfg.max_len} must be a multiple of page_size={ps}"
+            )
+        leaves = set(cache_struct(cfg, 1, ps))
+        if leaves != {"k", "v"}:
+            raise ValueError(
+                f"paged KV requires a plain k/v attention cache; family "
+                f"{cfg.family!r} has leaves {sorted(leaves)}"
+            )
+        self.pages_per_req = ecfg.max_len // ps
+        n_pages = ecfg.cache_pages or ecfg.max_slots * self.pages_per_req
+        self.cache = None
+        # +1: the last pool page is non-allocatable scratch for pad lanes
+        # and unused page-table tails
+        self.pool = self.model.init_cache(n_pages + 1, ps)
+        self.scratch_page = n_pages
+        self.pages = PageAllocator(page_size=ps, n_pages=n_pages)
+        # the engine-owned radix cache: nodes map prefix blocks to live
+        # pages in `self.pool` (contrast the session/router caches, which
+        # are accounting-only). It doubles as the allocator's pressure
+        # evictor via the constructor hookup.
+        self.prefix = PrefixCache(block=ps, pages=self.pages)
+
+        def step_paged(params, tokens, positions, pool, page_idx):
+            sub = gather_pages(cfg, pool, page_idx)
             logits, sub2 = decode_step(params, tokens, positions, cfg, sub)
-            return logits, scatter_slots(cfg, cache, sub2, slot_idx)
+            return logits, scatter_pages(cfg, pool, sub2, page_idx)
 
-        self._step = jax.jit(step)
+        self._step = jax.jit(step_paged)
+
+    @property
+    def paged(self) -> bool:
+        return self.page_size is not None
 
     def reserve(self, lr: LiveRequest) -> bool:
-        """Reserve a decode slot for lr without copying KV into it yet.
+        """Reserve decode capacity for lr without copying KV into it yet.
 
         The disagg fleet reserves at transfer *start* so a handoff never
-        arrives at a full decode server; `attach` completes the copy.
+        arrives at a full decode server; `attach` completes the copy. Slot
+        mode charges the token budget (prefix hits granted back as a
+        credit); paged mode builds the page table, linking shared prefix
+        pages instead of drawing fresh ones.
         """
         r = lr.req
-        need = r.input_len + r.output_len
-        # prefix-cache credit: tokens matched at submit time share KV with an
-        # earlier prompt and don't charge the budget (serving/prefixcache.py)
-        slot = self.alloc.alloc(need, credit=r.prefix_hit_tokens)
+        if self.pages is None:
+            need = r.input_len + r.output_len
+            # prefix-cache credit: tokens matched at submit time share KV
+            # with an earlier prompt and don't charge the budget
+            slot = self.alloc.alloc(need, credit=r.prefix_hit_tokens)
+            if slot is None:
+                return False
+            lr.slot = slot
+            return True
+        slot = self.alloc.alloc(0)
         if slot is None:
             return False
+        shared = tuple(lr.shared_pages or ())
+        if lr.kv_src is not self:
+            # a foreign pool's page ids mean nothing here; the seeded
+            # prefill cache carries the head bytes, attach writes them
+            shared = ()
+        need = min(r.input_len + r.output_len, self.ecfg.max_len)
+        table = self.pages.alloc_table(slot, need, shared)
+        if table is None:
+            self.alloc.release(slot)
+            return False
         lr.slot = slot
+        lr.page_table = table
         return True
 
     def attach(self, lr: LiveRequest) -> None:
-        """Copy lr's prefill cache (1, max_len) into its reserved slot."""
-        sub = jax.tree.map(lambda x: x, lr.prefill_cache)
-        self.cache = scatter_slots(
-            self.model.cfg, self.cache, sub, jnp.asarray([lr.slot], jnp.int32)
-        )
+        """Copy lr's prefill cache (1, max_len) into its reserved slot/pages."""
+        if self.pages is None:
+            sub = jax.tree.map(lambda x: x, lr.prefill_cache)
+            self.cache = scatter_slots(
+                self.model.cfg, self.cache, sub, jnp.asarray([lr.slot], jnp.int32)
+            )
+            lr.prefill_cache = None
+            return
+        r = lr.req
+        ps = self.page_size
+        table = lr.page_table
+        n_shared = len(lr.shared_pages or ())  # already live in this pool?
+        if lr.kv_src is not self:
+            n_shared = 0  # head bytes were seeded from another engine's pool
+        if len(table) > n_shared:
+            fresh = jnp.asarray(table[n_shared:], jnp.int32)
+            for name, leaf in self.pool.items():
+                src = lr.prefill_cache[name]  # (L, 1, max_len, ...)
+                blocks = src.reshape(
+                    src.shape[0], self.ecfg.max_len // ps, ps, *src.shape[3:]
+                )
+                self.pool[name] = leaf.at[:, fresh].set(
+                    blocks[:, n_shared : len(table)]
+                )
         lr.prefill_cache = None
+        # index the landed prompt in the radix cache: later prompts sharing
+        # this head link these pages instead of recomputing the KV
+        self.prefix.assign_pages(lr.tokens[: r.input_len], table)
 
     def admit(self, lr: LiveRequest) -> bool:
-        """Transfer prefill KV into a decode slot (the PD handoff)."""
+        """Transfer prefill KV into decode capacity (the PD handoff)."""
         if not self.reserve(lr):
             return False
         self.attach(lr)
         return True
 
     def release(self, lr: LiveRequest) -> None:
+        if self.prefix is not None:
+            # drop the rid's radix pins whether or not it ever got a slot
+            # (queue-stage cancels release before reserve succeeds)
+            self.prefix.release(lr.req.rid)
         if lr.slot is not None:
+            if self.pages is not None:
+                self.pages.release_table(lr.slot)
+                lr.page_table = None
             self.alloc.release(lr.slot)
             lr.slot = None
 
@@ -174,21 +324,28 @@ class DecodeEngine:
         """One decode step over the scheduler-chosen sub-batch."""
         ecfg = self.ecfg
         bs = _bucket(len(batch), ecfg.decode_buckets)
-        slots = [lr.slot for lr in batch] + [0] * (bs - len(batch))
         toks = [lr.tokens[-1] for lr in batch] + [0] * (bs - len(batch))
         pos = [lr.req.seq_len - 1 for lr in batch] + [0] * (bs - len(batch))
-        # NOTE: padded entries write into slot 0 at pos 0 — guarded by using a
-        # dedicated scratch slot when padding is possible
-        if bs > len(batch):
-            scratch = ecfg.max_slots - 1  # reserved scratch slot
-            slots = [lr.slot for lr in batch] + [scratch] * (bs - len(batch))
-        logits, self.cache = self._step(
-            self.params,
-            jnp.asarray(toks, jnp.int32)[:, None],
-            jnp.asarray(pos, jnp.int32),
-            self.cache,
-            jnp.asarray(slots, jnp.int32),
-        )
+        if self.pages is not None:
+            p, sp = self.pages_per_req, self.scratch_page
+            rows = [lr.page_table + [sp] * (p - len(lr.page_table)) for lr in batch]
+            rows += [[sp] * p] * (bs - len(batch))  # pad lanes write scratch only
+            logits, self.pool = self._step(
+                self.params,
+                jnp.asarray(toks, jnp.int32)[:, None],
+                jnp.asarray(pos, jnp.int32),
+                self.pool,
+                jnp.asarray(rows, jnp.int32),
+            )
+        else:
+            slots = [lr.slot for lr in batch] + [self.scratch_slot] * (bs - len(batch))
+            logits, self.cache = self._step(
+                self.params,
+                jnp.asarray(toks, jnp.int32)[:, None],
+                jnp.asarray(pos, jnp.int32),
+                self.cache,
+                jnp.asarray(slots, jnp.int32),
+            )
         toks_out = sample(logits, temperature=ecfg.temperature, key=key)
         return np.asarray(toks_out)[: len(batch)]
 
@@ -279,7 +436,12 @@ class DisaggServer:
         the adaptive scheduler state, and re-zeroes the clock so the
         restarted replica's timing is pinnable against a fresh build."""
         ecfg = self.ecfg
-        self.decode.cache = self.model.init_cache(ecfg.max_slots, ecfg.max_len)
+        if self.decode.paged:
+            # the pool, allocator, and radix cache are one consistent unit:
+            # rebuild all three (the KV is gone, so are the page bindings)
+            self.decode._init_paged(self.model.cfg)
+        else:
+            self.decode.cache = self.model.init_cache(ecfg.max_slots + 1, ecfg.max_len)
         self.decode.alloc = SlotAllocator(ecfg.max_slots, ecfg.kv_cap_tokens)
         self._init_sched_state()
         self.last_session = None

@@ -1,14 +1,27 @@
-"""Slot-based KV cache management for the decode engine.
+"""Slot- and page-based KV cache management for the decode engine.
 
-Host-side allocator tracks which slots are live and enforces a token-budget
+Host-side allocators track which slots/pages are live and enforce the
 admission cap (the paper's memory-bound decode regime); device-side helpers
-gather/scatter per-slot cache slices so a scheduler-chosen sub-batch can be
-decoded without touching delayed slots.
+gather/scatter per-request cache slices so a scheduler-chosen sub-batch can
+be decoded without touching delayed requests.
+
+Two allocation substrates coexist:
+
+  * `SlotAllocator` — the legacy contiguous layout: one ``max_len`` slot per
+    request, a token-budget cap, prefix hits granted back as admission
+    *credits* (accounting only, every token recomputed).
+  * `PageAllocator` — fixed-size pages with per-request page tables and
+    refcounted sharing (vLLM/sglang's paged-KV pattern). Matched prefix
+    blocks map to *live* pages, so shared prompt heads are neither recomputed
+    nor double-stored; `gather_pages`/`scatter_pages` are the page-table
+    twins of `gather_slots`/`scatter_slots`.
+
+See DESIGN.md §kvcache.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -101,3 +114,143 @@ class SlotAllocator:
         else:  # legacy snapshot without a free list: synthesize a canonical one
             live = set(self.live_tokens)
             self.free = [s for s in range(self.max_slots) if s not in live][::-1]
+
+
+def gather_pages(cfg: ModelConfig, pool: Dict, page_idx: jax.Array) -> Dict:
+    """Assemble per-request contiguous cache views from a page pool.
+
+    ``pool`` leaves are ``(L, n_pages, page_size, ...)``; ``page_idx`` is the
+    ``(batch, pages_per_req)`` page table (pad rows/tails use the scratch
+    page). Returns leaves shaped ``(L, batch, pages_per_req * page_size,
+    ...)`` — exactly what `gather_slots` hands the model, so `decode_step`
+    runs unchanged on top. Positions beyond a request's valid length land in
+    scratch/garbage pages, which the attention mask zeroes out exactly
+    (`kv_pos < kv_valid`), keeping paged logits bit-identical to slot-mode.
+    """
+    b, p = page_idx.shape
+    flat = page_idx.reshape(-1)
+    out = {}
+    for name, leaf in pool.items():
+        if cache_batch_dim(cfg, name) != 1:
+            raise ValueError(
+                f"paged KV supports attention-style (L, B, T, ...) cache "
+                f"leaves only; leaf {name!r} has its batch on another axis"
+            )
+        g = jnp.take(leaf, flat, axis=1)
+        out[name] = g.reshape(leaf.shape[0], b, p * leaf.shape[2], *leaf.shape[3:])
+    return out
+
+
+def scatter_pages(cfg: ModelConfig, pool: Dict, sub: Dict, page_idx: jax.Array) -> Dict:
+    """Inverse of `gather_pages`: write per-request views back to the pool.
+
+    Shared pages appear in several rows of ``page_idx``; decode only ever
+    writes at a request's *own* position (>= its private region), so every
+    duplicate index carries the page's unchanged bytes and the duplicate
+    ``.at[].set`` is value-deterministic. Scratch-page duplicates hold
+    garbage that nothing reads back unmasked.
+    """
+    b, p = page_idx.shape
+    flat = page_idx.reshape(-1)
+    out = {}
+    for name, leaf in pool.items():
+        ps = leaf.shape[2]
+        s = sub[name].reshape(leaf.shape[0], b * p, ps, *leaf.shape[3:])
+        out[name] = leaf.at[:, flat].set(s)
+    return out
+
+
+@dataclass
+class PageAllocator:
+    """Host bookkeeping for a fixed-size KV page pool.
+
+    Pages are the unit of both capacity and sharing: a request's table is
+    ``[shared prefix pages..., private pages...]``; shared pages bump a
+    refcount instead of copying, and a page returns to the free list only
+    when its last reference drops. Used-token accounting is O(1) — the page
+    is the granule, so ``used_tokens`` is just occupied pages x page size.
+
+    ``evictor`` is the prefix cache's pressure hook: when the free list
+    cannot cover an allocation the allocator asks the cache to surrender
+    cold, unreferenced pages (never pages a live table still maps —
+    refcount > its own retain) before giving up.
+    """
+
+    page_size: int
+    n_pages: int
+
+    free: List[int] = field(default_factory=list)
+    refcount: Dict[int, int] = field(default_factory=dict)
+    tables: Dict[int, List[int]] = field(default_factory=dict)  # owner -> pages
+    evictor: Optional[Callable[[int], int]] = None  # want_pages -> freed_pages
+    # cumulative telemetry (summary()/bench rows)
+    shared_links: int = field(default=0, init=False)
+    pressure_evictions: int = field(default=0, init=False)
+
+    def __post_init__(self) -> None:
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {self.n_pages}")
+        # mirror SlotAllocator: pop from the tail => page 0 handed out first
+        self.free = list(range(self.n_pages))[::-1]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_tokens(self) -> int:
+        return (self.n_pages - len(self.free)) * self.page_size
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-max(0, n_tokens) // self.page_size)
+
+    def can_admit(self, n_tokens: int, shared: Sequence[int] = ()) -> bool:
+        """Free-list check only (no eviction attempt): ``alloc_table`` may
+        still succeed where this returns False by reclaiming cache pages."""
+        return self.pages_needed(n_tokens) - len(shared) <= len(self.free)
+
+    def alloc_table(
+        self, owner: int, n_tokens: int, shared: Sequence[int] = ()
+    ) -> Optional[List[int]]:
+        """Build ``owner``'s page table for ``n_tokens`` of KV, linking
+        ``shared`` prefix pages (refcount bump) and drawing the rest fresh.
+        Returns None — state untouched — if even eviction can't cover it."""
+        if owner in self.tables:
+            raise ValueError(f"owner {owner} already holds a page table")
+        need = self.pages_needed(n_tokens)
+        n_fresh = need - len(shared)
+        if n_fresh < 0:
+            raise ValueError(
+                f"{len(shared)} shared pages exceed the {need}-page need"
+            )
+        if n_fresh > len(self.free) and self.evictor is not None:
+            self.pressure_evictions += self.evictor(n_fresh - len(self.free))
+        if n_fresh > len(self.free):
+            return None
+        for p in shared:
+            self.refcount[p] += 1
+        self.shared_links += len(shared)
+        table = list(shared)
+        for _ in range(n_fresh):
+            p = self.free.pop()
+            self.refcount[p] = 1
+            table.append(p)
+        self.tables[owner] = table
+        return list(table)
+
+    def retain(self, page: int) -> None:
+        self.refcount[page] += 1
+
+    def release_page(self, page: int) -> None:
+        rc = self.refcount[page] - 1
+        if rc:
+            self.refcount[page] = rc
+        else:
+            del self.refcount[page]
+            self.free.append(page)
+
+    def release_table(self, owner: int) -> None:
+        for p in self.tables.pop(owner, ()):
+            self.release_page(p)

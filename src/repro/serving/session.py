@@ -86,6 +86,13 @@ class SessionMetrics:
     prefix_hits: int = 0
     prefix_hit_tokens: int = 0
     prefix_lookup_tokens: int = 0
+    # paged engines only: hit tokens whose KV was *linked* (prefill skipped
+    # them entirely) — always <= prefix_hit_tokens, equal on paged sessions
+    prefix_cached_tokens: int = 0
+    # prompt tokens the prefill engine actually computed; on a paged session
+    # this undershoots the admitted prompt mass by exactly the cached tokens
+    # (the "reuse is real" invariant, pinned in tests/test_paged_kv.py)
+    prefill_computed_tokens: int = 0
 
     def _bump(self, table: Dict[str, int], tenant: str) -> None:
         table[tenant] = table.get(tenant, 0) + 1
@@ -127,7 +134,12 @@ class ServeSession:
         self.tenant_queue_depth = tenant_queue_depth  # None = no per-tenant quota
         # prefix-cache-aware admission: every admitted prompt is matched then
         # inserted; matched tokens become the request's prefix_hit_tokens
-        # (KV budget credit + hit metrics). None = no prefix awareness.
+        # (KV budget credit + hit metrics). None = no prefix awareness. On a
+        # paged engine the cache is the engine-owned page-mapped radix trie
+        # — hits link live KV pages and skip real compute, so any
+        # accounting-only cache the caller passed is superseded.
+        if server.decode.paged:
+            prefix_cache = server.decode.prefix
         self.prefix_cache = prefix_cache
         self.on_token = on_token
 
@@ -197,19 +209,29 @@ class ServeSession:
                 )
             return False
         m.accepted += 1
+        lr = LiveRequest(req=request, tokens=list(prompt))
         prefix_kw: Dict[str, int] = {}
         if self.prefix_cache is not None:
             # admitted prompts only enter the trie: a shed prompt's KV never
-            # materializes, so indexing it would advertise phantom reuse
-            hit, eligible = self.prefix_cache.admit(prompt)
+            # materializes, so indexing it would advertise phantom reuse.
+            # The rid pins the prompt's node path against eviction until the
+            # request leaves the system (release in step()/cancel()).
+            hit, eligible = self.prefix_cache.admit(prompt, rid=request.rid)
             request.prefix_hit_tokens = hit
+            if self.server.decode.paged:
+                # real reuse: prefill starts after the cached head, and the
+                # matched pages are linked into the page table at reserve
+                request.prefix_cached_tokens = hit
+                m.prefix_cached_tokens += hit
+                lr.shared_pages = self.prefix_cache.shared_pages(request.rid)
+                lr.kv_src = self.server.decode
             m.prefix_lookups += 1
             m.prefix_lookup_tokens += eligible
             m.prefix_hit_tokens += hit
             if hit:
                 m.prefix_hits += 1
             prefix_kw = dict(prefix_eligible=eligible, prefix_hit=hit)
-        self.queue.append(LiveRequest(req=request, tokens=list(prompt)))
+        self.queue.append(lr)
         if tr is not None:
             tr.emit(
                 EventType.ADMIT, request.arrival, rid=request.rid,
@@ -239,6 +261,8 @@ class ServeSession:
                     lst.remove(lr)
                     slot = lr.slot
                     self.server.decode.release(lr)
+                    if self.prefix_cache is not None:
+                        self.prefix_cache.release(rid)  # idempotent unpin
                     lr.prefill_cache = None
                     lr.req.phase = Phase.CANCELLED
                     lr.req.done_time = self.server._now()
@@ -306,8 +330,13 @@ class ServeSession:
                     req.token_times.append(fin)
                     req.phase = Phase.TRANSFER
                     # price the PD handoff with the simulator's formula: the
-                    # KV is admissible only after lat + bytes/bw has elapsed
-                    lr.transfer_ready_at = fin + srv.cost.transfer_time(req.input_len)
+                    # KV is admissible only after lat + bytes/bw has elapsed.
+                    # Cached-prefix tokens never cross the wire (their pages
+                    # are already in the decode pool), so only the computed
+                    # tail is priced; prefix_cached_tokens is 0 off-paged
+                    lr.transfer_ready_at = fin + srv.cost.transfer_time(
+                        req.input_len - req.prefix_cached_tokens
+                    )
                     self.queue.remove(lr)
                     self.waiting_adm.append(lr)
                     if tr is not None:
@@ -335,6 +364,7 @@ class ServeSession:
                         )
                     self._emit(req, tok, fin)
             elapsed = (clock.monotonic() - t0) * ecfg.time_scale
+            self.metrics.prefill_computed_tokens += total
             if total:
                 srv.mu.update(total, max(elapsed, 1e-9))
 
@@ -401,6 +431,8 @@ class ServeSession:
                     r.done_time = tend
                     slot = lr.slot
                     srv.decode.release(lr)
+                    if self.prefix_cache is not None:
+                        self.prefix_cache.release(r.rid)  # idempotent unpin
                     self.active.remove(lr)
                     self.metrics.completed += 1
                     self.metrics._bump(self.metrics.completed_by_tenant, r.tenant)
@@ -462,6 +494,19 @@ class ServeSession:
             for r in self.requests
         ]
         m = self.metrics
+        decode = self.server.decode
+        pages = None
+        if decode.paged:
+            pa = decode.pages
+            pages = dict(
+                page_size=pa.page_size,
+                total=pa.n_pages,
+                free=pa.free_pages,
+                used_tokens=pa.used_tokens,
+                shared_links=pa.shared_links,
+                pressure_evictions=pa.pressure_evictions,
+                cached_blocks=len(decode.prefix),
+            )
         return dict(
             submitted=m.submitted,
             accepted=m.accepted,
@@ -488,5 +533,8 @@ class ServeSession:
                     else 0.0
                 ),
             ),
+            prefix_cached_tokens=m.prefix_cached_tokens,
+            prefill_computed_tokens=m.prefill_computed_tokens,
+            pages=pages,
             requests=per,
         )

@@ -130,6 +130,13 @@ class HarnessConfig:
     engine_chunk_size: int = 16
     engine_max_slots: int = 8
     engine_max_len: int = 64
+    # paged KV (DESIGN.md §kvcache): page_size switches every engine-family
+    # backend from contiguous per-slot KV to refcounted pages with radix
+    # prefix reuse; None keeps the slot substrate (bit-identical on
+    # prefix-free traces — pinned in tests). cache_pages bounds the pool
+    # (None = max_slots * max_len / page_size, i.e. slot-equivalent).
+    page_size: Optional[int] = None
+    cache_pages: Optional[int] = None
     queue_depth: Optional[int] = None  # global admission bound (engine)
     tenant_quota: Optional[int] = None  # per-tenant queued bound (engine)
     # async-engine backend: concurrent stream consumers, per-stream token
@@ -327,6 +334,8 @@ def _engine_cfg(prefill: str, decode: str, hcfg: HarnessConfig):
         tenant_queue_depth=hcfg.tenant_quota,
         transfer_lat=hcfg.transfer_lat,
         transfer_bw=hcfg.transfer_bw,
+        page_size=hcfg.page_size,
+        cache_pages=hcfg.cache_pages,
     )
 
 
@@ -377,19 +386,19 @@ def _engine_setup(
 def _run_engine(
     reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
     trace: Optional[TraceRecorder] = None,
-) -> List[Request]:
+) -> Tuple[List[Request], Optional[Dict]]:
     from repro.serving.session import ServeSession
 
     (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle, trace=trace)
     session = ServeSession(server)
     session.run(pairs)
-    return [r for r, _ in pairs]
+    return [r for r, _ in pairs], kv_cell_block(session.summary())
 
 
 def _run_async_engine(
     reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
     trace: Optional[TraceRecorder] = None,
-) -> List[Request]:
+) -> Tuple[List[Request], Optional[Dict]]:
     """The live-concurrency cell: open-loop submission through the
     `AsyncServeSession` frontend, streams drained by concurrent clients."""
     import asyncio
@@ -398,7 +407,7 @@ def _run_async_engine(
 
     (server,), pairs = _engine_setup(reqs, prefill, decode, hcfg, bundle, trace=trace)
 
-    async def _serve() -> None:
+    async def _serve() -> Dict:
         frontend = AsyncServeSession(
             server,
             stream_buffer=hcfg.stream_buffer,
@@ -406,9 +415,26 @@ def _run_async_engine(
         )
         async with frontend:
             await frontend.replay(pairs, clients=hcfg.async_clients)
+        return frontend.summary()
 
-    asyncio.run(_serve())
-    return [r for r, _ in pairs]
+    summary = asyncio.run(_serve())
+    return [r for r, _ in pairs], kv_cell_block(summary)
+
+
+def kv_cell_block(s: Dict) -> Optional[Dict]:
+    """Project a session/fleet ``summary()`` into the report cell's ``kv``
+    block: page-pool occupancy + sharing telemetry and the two sides of the
+    reuse-is-real invariant (``prefill_computed_tokens`` must equal total
+    prompt tokens minus ``prefix_cached_tokens`` — pinned in tests). None
+    when the cell ran on the slot substrate (no ``pages`` in the summary),
+    so slot cells keep their exact pre-paging schema."""
+    if s.get("pages") is None:
+        return None
+    return dict(
+        pages=s["pages"],
+        prefix_cached_tokens=s["prefix_cached_tokens"],
+        prefill_computed_tokens=s["prefill_computed_tokens"],
+    )
 
 
 def router_cell_block(s: Dict) -> Dict:
@@ -557,7 +583,7 @@ def disagg_cell_block(core, reqs: Sequence[Request]) -> Dict:
 def _run_disagg(
     reqs, prefill: str, decode: str, hcfg: HarnessConfig, bundle: _EngineBundle,
     trace: Optional[TraceRecorder] = None,
-) -> Tuple[List[Request], Dict]:
+) -> Tuple[List[Request], Dict, Optional[Dict]]:
     """The P/D-split cell: ``disagg_prefill``:``disagg_decode`` servers on
     ONE shared ManualClock behind a `DisaggFleetSession`, prefill deflection
     by ``deflect_policy``. Returns the terminal requests plus the report's
@@ -592,7 +618,7 @@ def _run_disagg(
 
     fleet = asyncio.run(_serve())
     terminal = [r for r, _ in pairs]
-    return terminal, disagg_cell_block(fleet.core, terminal)
+    return terminal, disagg_cell_block(fleet.core, terminal), kv_cell_block(fleet.summary())
 
 
 def _trace_path(base: str, scenario: str, prefill: str, decode: str, backend: str) -> str:
@@ -641,6 +667,7 @@ def evaluate_cell(
     router_block = None
     disagg_block = None
     churn_block = None
+    kv_block = None
     # trace=None keeps every emission site on its `if recorder is None`
     # fast path — the traced and untraced runs are bit-identical either way
     # (pinned in tests), this just skips even the no-op checks
@@ -648,11 +675,13 @@ def evaluate_cell(
     if backend == "sim":
         terminal = _run_sim(reqs, prefill, decode, hcfg, trace=recorder)
     elif backend == "engine":
-        terminal = _run_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
+        terminal, kv_block = _run_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
     elif backend == "async-engine":
-        terminal = _run_async_engine(reqs, prefill, decode, hcfg, bundle, trace=recorder)
+        terminal, kv_block = _run_async_engine(
+            reqs, prefill, decode, hcfg, bundle, trace=recorder
+        )
     elif backend == "disagg":
-        terminal, disagg_block = _run_disagg(
+        terminal, disagg_block, kv_block = _run_disagg(
             reqs, prefill, decode, hcfg, bundle, trace=recorder
         )
     elif backend == "churn":
@@ -671,6 +700,14 @@ def evaluate_cell(
         wall_time_s=time.perf_counter() - t0,  # repro: allow[RPA001] see t0 above
     )
     cell.update(_cell_report(terminal))
+    if hcfg.page_size is not None and backend != "sim":
+        # bench cells carrying paged runs key separately from slot cells
+        # (benchmarks/check_regression.py folds this into the cell key).
+        # The sim backend never builds an engine, so page_size is inert
+        # there and the cell keeps its slot identity.
+        cell["variant"] = "paged"
+    if kv_block is not None:
+        cell["kv"] = kv_block
     if router_block is not None:
         cell["router"] = router_block
     if disagg_block is not None:

@@ -28,6 +28,7 @@ def test_available_policies_enumerates_every_side():
     assert set(pol) == {"prefill", "decode", "router", "deflection", "autoscaler"}
     assert set(pol["prefill"]) == {
         "kairos-urgency", "kairos-urgency-plus", "fcfs", "sjf", "edf",
+        "srpt", "cache-aware",
     }
     assert set(pol["decode"]) == {"kairos-slack", "kairos-slack-greedy", "continuous"}
     assert set(pol["router"]) == {
